@@ -1,0 +1,107 @@
+"""Perf hillclimb driver: hypothesis -> change -> re-lower -> record.
+
+Runs the three chosen cells through a sequence of flag variants, measuring
+the three roofline terms per variant; appends to perf_results.json.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [--cell N]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# variants: (cell_name, arch, shape, [(tag, hypothesis, flag_overrides)])
+PLAN = [
+    ("command-r-train", "command-r-plus-104b", "train_4k", [
+        ("base", "paper-faithful baseline (naive chunked attention, "
+         "remat=nothing, FSDP)", {}),
+        ("causal-skip", "causal block skipping halves attention "
+         "flops+score bytes -> compute -~40%, memory -~30%",
+         {"causal_skip": True}),
+        ("remat-dots", "saving matmul outputs cuts recompute reads "
+         "-> memory down, compute -25%, temp up",
+         {"causal_skip": True, "remat_policy": "dots"}),
+        ("chunk-1024", "larger q-chunks cut loop/mask overhead bytes a "
+         "few %, same flops",
+         {"causal_skip": True, "attn_chunk": 1024}),
+    ]),
+    ("mixtral-prefill", "mixtral-8x22b", "prefill_32k", [
+        ("base", "baseline: SWA arch paying full 32k attention", {}),
+        ("swa-skip", "window+causal block skipping: k-range 32768 -> "
+         "~4608 per q-chunk => ~7x attention flops/bytes cut",
+         {"causal_skip": True}),
+        ("moe-group-512", "halving dispatch group halves per-token "
+         "dispatch flops (EC product), slight padding waste",
+         {"causal_skip": True, "moe_group": 512}),
+        ("chunk-256", "smaller q-chunk halves peak score buffer; total "
+         "bytes ~const => memory term ~unchanged (test)",
+         {"causal_skip": True, "attn_chunk": 256}),
+        ("chunk-1024+group-512", "now collective-bound: fewer q-chunks "
+         "=> fewer boundary collectives (command-r lesson) + cheap "
+         "dispatch",
+         {"causal_skip": True, "attn_chunk": 1024, "moe_group": 512}),
+    ]),
+    ("rwkv6-train", "rwkv6-7b", "train_4k", [
+        ("base", "baseline: 5 separate token-shift projections", {}),
+        ("fused-proj", "fold mu into fused weights: x/xs gathered once "
+         "instead of 5x (fwd+bwd) => collective -30..50%",
+         {"fuse_rwkv_proj": True}),
+        ("chunk-128", "scan_chunk 64->128: intra-chunk flops ~S*T double,"
+         " but half the chunk overhead => compute UP (expected refute "
+         "for compute, test bytes)",
+         {"fuse_rwkv_proj": True, "scan_chunk": 128}),
+        ("remat-dots", "save matmul outputs -> fewer recompute reads",
+         {"fuse_rwkv_proj": True, "remat_policy": "dots"}),
+        ("chunk32-dots", "UNfused (fusion refuted: XLA already CSEs "
+         "the x/xs gathers) + scan_chunk 32: intra-chunk bytes ~S*T "
+         "halve + dots remat",
+         {"scan_chunk": 32, "remat_policy": "dots"}),
+        ("chunk16-dots", "scan_chunk 16: intra bytes halve again, but "
+         "per-chunk overhead (state carries, cumsums) now ~40% of work "
+         "=> expect diminishing or negative return",
+         {"scan_chunk": 16, "remat_policy": "dots"}),
+        ("chunk8-dots", "scan_chunk 8: state-carry outer products "
+         "([N,N] per 8 tokens) start dominating; expect the knee",
+         {"scan_chunk": 8, "remat_policy": "dots"}),
+    ]),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", type=int, default=None)
+    ap.add_argument("--out", default="perf_results.json")
+    args = ap.parse_args()
+    from repro.launch.dryrun import run_cell, load_table
+    from repro.models.flags import Flags
+    import dataclasses
+
+    table = load_table(args.out)
+    plan = PLAN if args.cell is None else [PLAN[args.cell]]
+    for cell_name, arch, shape, variants in plan:
+        for tag, hypothesis, overrides in variants:
+            key = f"{cell_name}|{tag}"
+            if key in table and table[key].get("status") == "ok":
+                print(f"[{key}] cached")
+                continue
+            flags = dataclasses.replace(Flags(), **overrides)
+            rec = run_cell(arch, shape, "single", flags)
+            rec["hypothesis"] = hypothesis
+            rec["tag"] = tag
+            table[key] = rec
+            with open(args.out, "w") as f:
+                json.dump(table, f, indent=1)
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                print(f"[{key}] comp={r['compute_s']:.2f}s "
+                      f"mem={r['memory_s']:.2f}s coll={r['collective_s']:.2f}s "
+                      f"dom={r['dominant']} mfu={r['roofline_fraction']*100:.2f}%")
+            else:
+                print(f"[{key}] FAIL {rec.get('error')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+Run: ``PYTHONPATH=src python -m benchmarks.run`` (or ``--only fig6``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def _row(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.3f},{derived}")
+
+
+# ----------------------------------------------------------- Fig 2: tiers
+def bench_fig2_latency() -> None:
+    """Paper Fig 2: estimated access latencies per tier."""
+    from repro.core.tiers import paper_tiers
+    for kind, spec in paper_tiers().items():
+        _row(f"fig2.latency.{kind.value}", spec.added_latency_s * 1e6,
+             f"bw={spec.bandwidth_Bps/1e9:.0f}GBps")
+
+
+# ------------------------------------------------------------- Fig 6: sim
+def bench_fig6() -> None:
+    """Paper Fig 6 (a)+(b): Ideal/DFTL/LMB-CXL/LMB-PCIe x 4 workloads."""
+    from repro.sim import make_ssd_model, make_workload, simulate
+    from repro.sim.ssd import make_schemes
+    from repro.sim.workload import ALL_PAPER_WORKLOADS
+    for gen in (4, 5):
+        spec = make_ssd_model(gen)
+        schemes = make_schemes(spec)
+        for wl_name in ALL_PAPER_WORKLOADS:
+            wl = make_workload(wl_name, n_ios=100_000)
+            ideal = simulate(spec, schemes["ideal"], wl).iops
+            for sname in ("ideal", "lmb-cxl", "lmb-pcie", "dftl"):
+                t0 = time.perf_counter()
+                r = simulate(spec, schemes[sname], wl)
+                wall = (time.perf_counter() - t0) * 1e6
+                _row(f"fig6.gen{gen}.{wl_name}.{sname}", wall,
+                     f"kiops={r.iops/1e3:.0f};rel={r.iops/ideal:.3f};"
+                     f"p99us={r.p99_lat_us:.1f}")
+
+
+# --------------------------------------------------- §4.1.2 locality sweep
+def bench_locality_sweep() -> None:
+    """Hot-index hit ratio -> throughput recovery (paper §4.1.2 claim)."""
+    from repro.sim import make_ssd_model, make_workload, simulate
+    from repro.sim.ssd import Scheme, make_schemes
+    spec = make_ssd_model(5)
+    base = make_schemes(spec)["lmb-pcie"]
+    wl = make_workload("randread", n_ios=60_000)
+    ideal = simulate(spec, make_schemes(spec)["ideal"], wl).iops
+    for hit in (0.0, 0.5, 0.8, 0.9, 0.95, 0.99):
+        s = Scheme(base.name, base.t_tier_s, base.write_through_index,
+                   onboard_hit_ratio=hit)
+        r = simulate(spec, s, wl)
+        _row(f"locality.gen5.randread.hit{int(hit*100):02d}", 0.0,
+             f"kiops={r.iops/1e3:.0f};rel={r.iops/ideal:.3f}")
+
+
+# ------------------------------------------------------ allocator (§3.2)
+def bench_allocator() -> None:
+    """alloc/free/share microbench on the Table-2 API."""
+    from repro.core import LMBHost, make_default_fabric
+    from repro.core.fabric import DeviceClass, DeviceInfo
+    fm, _ = make_default_fabric(pool_gib=8)
+    fm.bind_host("h0")
+    fm.register_device(DeviceInfo("d0", DeviceClass.PCIE))
+    fm.register_device(DeviceInfo("d1", DeviceClass.PCIE))
+    host = LMBHost(fm, "h0", page_bytes=4096)
+    N = 2000
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(1, 1 << 20, N)
+    t0 = time.perf_counter()
+    allocs = [host.lmb_pcie_alloc("d0", int(s)) for s in sizes]
+    t_alloc = (time.perf_counter() - t0) / N * 1e6
+    t0 = time.perf_counter()
+    for a in allocs[:500]:
+        host.lmb_pcie_share("d0", a.mmid, "d1")
+    t_share = (time.perf_counter() - t0) / 500 * 1e6
+    t0 = time.perf_counter()
+    for a in allocs:
+        host.lmb_pcie_free("d0", a.mmid)
+    t_free = (time.perf_counter() - t0) / N * 1e6
+    _row("allocator.alloc", t_alloc, f"n={N}")
+    _row("allocator.share", t_share, "n=500")
+    _row("allocator.free", t_free,
+         f"blocks_left={host.allocator.block_count}")
+
+
+# --------------------------------------- offload overlap (TPU adaptation)
+def bench_offload_overlap() -> None:
+    """Bytes the LMB tier can page per step hidden behind compute (tier
+    model), plus measured LinkedBuffer fault cost on this host."""
+    import jax.numpy as jnp
+    from repro.core import LMBHost, LinkedBuffer, make_default_fabric
+    from repro.core.fabric import DeviceClass, DeviceInfo
+    from repro.core.metrics import Metrics
+    from repro.core.tiers import TierKind, hideable_page_bytes, tpu_tiers
+    host_tier = tpu_tiers()[TierKind.HOST_DRAM]
+    for step_ms in (5.0, 20.0, 100.0):
+        b = hideable_page_bytes(step_ms / 1e3, host_tier, streams=2)
+        _row(f"offload.hideable.step{int(step_ms)}ms", 0.0,
+             f"MiB={b/2**20:.0f}")
+    fm, _ = make_default_fabric(pool_gib=2)
+    fm.bind_host("h0")
+    fm.register_device(DeviceInfo("d0", DeviceClass.PCIE))
+    host = LMBHost(fm, "h0", page_bytes=1 << 16, metrics=Metrics())
+    buf = LinkedBuffer(name="bench", device_id="d0", host=host,
+                       page_shape=(256, 256), dtype=jnp.float32,
+                       onboard_pages=4, metrics=Metrics())
+    pages = buf.append_pages(16)
+    for p in pages:
+        buf.write(p, jnp.ones((256, 256)))
+    t0 = time.perf_counter()
+    n = 64
+    for i in range(n):
+        buf.read(pages[i % 16])  # forced paging traffic
+    dt = (time.perf_counter() - t0) / n * 1e6
+    _row("offload.page_fault", dt, "page=256KiB")
+
+
+# ---------------------------------------------------- roofline (dry-run)
+def bench_roofline_report() -> None:
+    """Summarize dryrun_results.json (run launch/dryrun.py first)."""
+    path = os.environ.get("DRYRUN_JSON", "dryrun_results.json")
+    if not os.path.exists(path):
+        _row("roofline.missing", 0.0, f"run launch/dryrun.py ({path})")
+        return
+    with open(path) as f:
+        table = json.load(f)
+    for key, rec in sorted(table.items()):
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        _row(f"roofline.{key}", r["compute_s"] * 1e6,
+             f"dom={r['dominant']};mem_s={r['memory_s']:.3f};"
+             f"coll_s={r['collective_s']:.3f};"
+             f"mfu@roof={r['roofline_fraction']*100:.1f}%")
+
+
+# ------------------------------------------------------------ serve perf
+def bench_serving() -> None:
+    """Engine throughput on the reduced model (CPU demo scale)."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.core import LMBHost, make_default_fabric
+    from repro.core.fabric import DeviceClass, DeviceInfo
+    from repro.models import build_model
+    from repro.models.flags import Flags
+    from repro.serve import EngineConfig, ServeEngine
+    cfg = get_config("qwen2-1.5b").reduced()
+    model = build_model(cfg, Flags(remat=False))
+    params = model.init(jax.random.key(0))
+    fm, _ = make_default_fabric(pool_gib=2)
+    fm.bind_host("h0")
+    fm.register_device(DeviceInfo("tpu0", DeviceClass.PCIE))
+    host = LMBHost(fm, "h0", page_bytes=4096)
+    eng = ServeEngine(model, params, host, EngineConfig(
+        decode_slots=4, max_seq_len=64, page_tokens=8, onboard_pages=8,
+        prefill_bucket=16))
+    rng = np.random.default_rng(0)
+    n_req, n_tok = 8, 8
+    for _ in range(n_req):
+        eng.submit(rng.integers(0, cfg.vocab_size, 12),
+                   max_new_tokens=n_tok)
+    t0 = time.perf_counter()
+    eng.run(500)
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    _row("serve.engine", wall / (n_req * n_tok) * 1e6,
+         f"tok_per_s={n_req*n_tok/wall:.1f};"
+         f"kv_hit={st['kv']['hit_ratio']:.2f}")
+
+
+BENCHES = {
+    "fig2": bench_fig2_latency,
+    "fig6": bench_fig6,
+    "locality": bench_locality_sweep,
+    "allocator": bench_allocator,
+    "offload": bench_offload_overlap,
+    "roofline": bench_roofline_report,
+    "serve": bench_serving,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"one of {sorted(BENCHES)}")
+    args, _ = ap.parse_known_args()
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+
+
+if __name__ == "__main__":
+    main()

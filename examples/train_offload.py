@@ -1,0 +1,47 @@
+"""End-to-end training driver with LMB extras.
+
+Trains a ~100M-parameter qwen2-family model for a few hundred steps on
+the synthetic corpus with:
+  * checkpoint/restart (kill it mid-run and re-run: it resumes),
+  * optimizer state parked in the LMB tier between steps,
+  * int8 error-feedback gradient compression.
+
+Run:  PYTHONPATH=src python examples/train_offload.py [--steps 300]
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+from repro.configs.base import get_config, register
+from repro.launch.train import run
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    # ~100M-class config in the qwen2 family
+    base = get_config("qwen2-1.5b")
+    cfg = dataclasses.replace(
+        base, name="qwen2-100m", num_layers=8, d_model=512, num_heads=8,
+        num_kv_heads=2, d_ff=2048, vocab_size=8192, head_dim=64,
+        dtype="float32", remat=False)
+    register(cfg)
+    print(f"params ~= {cfg.param_count()/1e6:.0f}M")
+
+    out = run("qwen2-100m", steps=args.steps, global_batch=8, seq_len=256,
+              ckpt_dir=args.ckpt, ckpt_every=50, reduced=False,
+              offload_opt=True, compress_grads=True, lr=3e-4)
+    print(f"loss {out['first_loss']:.3f} -> {out['final_loss']:.3f} "
+          f"({out['steps']} steps, {out['wall_s']:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""repro.core — the paper's contribution: the CXL Linked Memory Buffer.
+
+Layering (bottom-up):
+  tiers     — latency/bandwidth model of each memory tier (Fig 2)
+  pool      — expander (GFD/DMP/DPA) + 256 MB block allocator (Fig 4, §3.2)
+  fabric    — Fabric Manager, SAT/IOMMU access control, failure handling
+  api       — Table-2 kernel API: alloc / free / share, mmid handles
+  policy    — eviction (LRU/CLOCK/cost-aware) + prefetch
+  offload   — JAX realization of tier moves (memory_kind=pinned_host)
+  buffer    — LinkedBuffer: paged logical arrays spanning tiers
+"""
+
+from repro.core.api import Allocation, LMBHost
+from repro.core.buffer import LinkedBuffer
+from repro.core.fabric import (AccessDenied, DeviceClass, DeviceInfo,
+                               FabricManager, make_default_fabric)
+from repro.core.offload import TierExecutor, supports_in_jit_offload
+from repro.core.pool import (BLOCK_BYTES, BlockAllocator, Expander,
+                             InvalidHandle, LMBError, MediaKind, OutOfMemory)
+from repro.core.tiers import TierKind, TierSpec, paper_tiers, tpu_tiers
+
+__all__ = [
+    "Allocation", "LMBHost", "LinkedBuffer", "AccessDenied", "DeviceClass",
+    "DeviceInfo", "FabricManager", "make_default_fabric", "TierExecutor",
+    "supports_in_jit_offload", "BLOCK_BYTES", "BlockAllocator", "Expander",
+    "InvalidHandle", "LMBError", "MediaKind", "OutOfMemory", "TierKind",
+    "TierSpec", "paper_tiers", "tpu_tiers",
+]

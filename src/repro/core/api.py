@@ -1,0 +1,174 @@
+"""LMB kernel-module API (paper Table 2).
+
+``LMBHost`` plays the role of the LMB kernel module on one host: it owns a
+``BlockAllocator`` fed by the Fabric Manager, exposes the Table-2 interface
+
+    lmb_pcie_alloc(dev, size)      -> Allocation(hpa, mmid)
+    lmb_cxl_alloc(cxld, size)      -> Allocation(hpa, mmid, dpid)
+    lmb_pcie_free(dev, mmid)
+    lmb_cxl_free(cxld, mmid)
+    lmb_pcie_share(dev, mmid)      -> Allocation for the target device
+    lmb_cxl_share(cxld, mmid)
+
+and maintains the HPA/bus-address ↔ physical mapping plus the access-control
+entries (IOMMU/SAT) through the FM.  The paper's "loading priority" concern
+(LMB must exist before device drivers initialize) maps to LMBHost being
+constructed before any consumer in our launchers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.fabric import (AccessDenied, DeviceClass, DeviceInfo,
+                               FabricManager)
+from repro.core.metrics import GLOBAL_METRICS, Metrics
+from repro.core.pool import (DEFAULT_PAGE_BYTES, BlockAllocator, InvalidHandle,
+                             LMBError, MediaKind, Region)
+
+#: HPA window where expander blocks get mapped on the host (arbitrary base
+#: chosen above typical host DRAM; purely a modeling constant).
+HPA_WINDOW_BASE = 0x4000_0000_0000
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    """What a device driver gets back from an alloc/share call (Table 2)."""
+
+    mmid: int              # unique memory id in the local host
+    hpa: int               # host physical address of the region
+    bus_addr: int          # device-visible bus address (PCIe) or HPA (CXL)
+    nbytes: int
+    device_id: str
+    #: global PID of the expander, for CXL devices to initiate P2P (Table 2)
+    dpid: Optional[int] = None
+
+
+class LMBHost:
+    """The LMB kernel module instance for one host."""
+
+    def __init__(self, fm: FabricManager, host_id: str,
+                 page_bytes: int = DEFAULT_PAGE_BYTES,
+                 media: MediaKind = MediaKind.DRAM,
+                 metrics: Optional[Metrics] = None,
+                 expander_dpid: int = 0x7):
+        self.fm = fm
+        self.host_id = host_id
+        self.media = media
+        self.metrics = metrics or GLOBAL_METRICS
+        self._expander_dpid = expander_dpid
+        fm.bind_host(host_id) if host_id not in fm.snapshot()["hosts"] else None
+        self.allocator = BlockAllocator(
+            request_block=lambda: fm.request_block(host_id, media),
+            return_block=lambda bid: fm.return_block(host_id, bid),
+            page_bytes=page_bytes)
+        # mmid -> set of device_ids with access (owner first)
+        self._sharers: Dict[int, list[str]] = {}
+
+    # -- HPA mapping -----------------------------------------------------------
+    def _hpa_of(self, region: Region) -> int:
+        # block_id-indexed window keeps HPAs stable across block reuse
+        return (HPA_WINDOW_BASE + region.block_id * (256 * 2**20)
+                + region.offset)
+
+    def _bus_addr_of(self, region: Region, device: DeviceInfo) -> int:
+        if device.device_class is DeviceClass.PCIE:
+            # IOVA == HPA in our model (identity-mapped IOMMU domain)
+            return self._hpa_of(region)
+        return self._hpa_of(region)
+
+    # -- Table 2: alloc ----------------------------------------------------------
+    def _alloc(self, device_id: str, nbytes: int) -> Allocation:
+        device = self.fm.device(device_id)
+        region = self.allocator.alloc(device_id, nbytes)
+        self.fm.authorize(device_id, region.block_id, region.page_start,
+                          region.npages)
+        self._sharers[region.mmid] = [device_id]
+        self.metrics.event(device_id, f"alloc mmid={region.mmid} {nbytes}B")
+        return Allocation(
+            mmid=region.mmid,
+            hpa=self._hpa_of(region),
+            bus_addr=self._bus_addr_of(region, device),
+            nbytes=region.nbytes,
+            device_id=device_id,
+            dpid=(self._expander_dpid
+                  if device.device_class is DeviceClass.CXL else None))
+
+    def lmb_pcie_alloc(self, device_id: str, nbytes: int) -> Allocation:
+        if self.fm.device(device_id).device_class is not DeviceClass.PCIE:
+            raise LMBError(f"{device_id} is not a PCIe device")
+        return self._alloc(device_id, nbytes)
+
+    def lmb_cxl_alloc(self, device_id: str, nbytes: int) -> Allocation:
+        if self.fm.device(device_id).device_class is not DeviceClass.CXL:
+            raise LMBError(f"{device_id} is not a CXL device")
+        return self._alloc(device_id, nbytes)
+
+    # -- Table 2: free -------------------------------------------------------------
+    def _free(self, device_id: str, mmid: int) -> None:
+        region = self.allocator.region(mmid)
+        sharers = self._sharers.get(mmid, [])
+        if device_id not in sharers:
+            raise AccessDenied(
+                f"{device_id} does not hold mmid {mmid}")
+        if device_id != region.owner:
+            # a sharer "freeing" just drops its mapping
+            self.fm.revoke(device_id, region.block_id, region.page_start,
+                           region.npages)
+            sharers.remove(device_id)
+            return
+        # owner free: revoke everyone, then release pages
+        for dev in sharers:
+            self.fm.revoke(dev, region.block_id, region.page_start,
+                           region.npages)
+        del self._sharers[mmid]
+        self.allocator.free(mmid, owner=device_id)
+        self.metrics.event(device_id, f"free mmid={mmid}")
+
+    def lmb_pcie_free(self, device_id: str, mmid: int) -> None:
+        self._free(device_id, mmid)
+
+    def lmb_cxl_free(self, device_id: str, mmid: int) -> None:
+        self._free(device_id, mmid)
+
+    # -- Table 2: share ---------------------------------------------------------------
+    def _share(self, src_device: str, mmid: int,
+               dst_device: str) -> Allocation:
+        region = self.allocator.region(mmid)
+        sharers = self._sharers.get(mmid, [])
+        if src_device not in sharers:
+            raise AccessDenied(
+                f"{src_device} cannot share mmid {mmid} it does not hold")
+        dst = self.fm.device(dst_device)
+        self.fm.authorize(dst_device, region.block_id, region.page_start,
+                          region.npages)
+        if dst_device not in sharers:
+            sharers.append(dst_device)
+        self.metrics.event(
+            src_device, f"share mmid={mmid} -> {dst_device}")
+        return Allocation(
+            mmid=mmid,
+            hpa=self._hpa_of(region),
+            bus_addr=self._bus_addr_of(region, dst),
+            nbytes=region.nbytes,
+            device_id=dst_device,
+            dpid=(self._expander_dpid
+                  if dst.device_class is DeviceClass.CXL else None))
+
+    def lmb_pcie_share(self, device_id: str, mmid: int,
+                       target_device: str) -> Allocation:
+        return self._share(device_id, mmid, target_device)
+
+    def lmb_cxl_share(self, device_id: str, mmid: int,
+                      target_device: str) -> Allocation:
+        return self._share(device_id, mmid, target_device)
+
+    # -- data-path access check (used by LinkedBuffer + tests) ---------------------
+    def check_access(self, device_id: str, mmid: int, page: int = 0) -> None:
+        region = self.allocator.region(mmid)
+        self.fm.check_access(device_id, region.block_id,
+                             region.page_start + page)
+
+    def owned_bytes(self, device_id: str) -> int:
+        return self.allocator.owned_bytes(device_id)

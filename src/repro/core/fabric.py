@@ -1,0 +1,271 @@
+"""Fabric Manager (FM) and access control (SAT / IOMMU) for LMB.
+
+The FM "controls aspects of the system related to binding and management of
+pooled ports and devices" (paper Table 1).  Here it:
+
+  * owns one or more Expanders (GFDs) and grants/releases 256 MB blocks,
+  * maintains the **SAT** (SPID Access Table) authorizing CXL devices, and
+    IOMMU-style per-PCIe-device mapping tables,
+  * supports **dynamic capacity**: per-host quotas that can be raised or
+    lowered at runtime (CXL DCD semantics),
+  * supports **failure injection + recovery** — the paper calls out that "a
+    single failure in the memory expander can render all devices unavailable";
+    we journal every grant so that consumers can rebuild after fail-over to a
+    spare expander,
+  * keeps an **allocation journal** that makes the pool reconstructible
+    (needed by the training checkpoint/restore path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+from repro.core.pool import (BLOCK_BYTES, BlockGrant, Expander, InvalidHandle,
+                             LMBError, MediaKind, OutOfMemory)
+
+
+class DeviceClass(enum.Enum):
+    PCIE = "pcie"   # host-forwarded path; isolation via IOMMU tables
+    CXL = "cxl"     # P2P path; isolation via SPID Access Table (SAT)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceInfo:
+    device_id: str
+    device_class: DeviceClass
+    #: Source PBR ID for CXL devices (paper Table 1); None for PCIe devices
+    spid: Optional[int] = None
+
+
+class AccessDenied(LMBError):
+    pass
+
+
+class SAT:
+    """SPID Access Table: (spid → set of block_ids it may touch).
+
+    Matches the paper's GFD access control: "GFD can identify the CXL device
+    or host that initiates the request according to the SPID field"; entries
+    are updated on alloc/free/share via the GFD Component Management Command
+    Set.
+    """
+
+    def __init__(self) -> None:
+        self._table: Dict[int, Set[int]] = {}
+
+    def add(self, spid: int, block_id: int) -> None:
+        self._table.setdefault(spid, set()).add(block_id)
+
+    def remove(self, spid: int, block_id: int) -> None:
+        self._table.get(spid, set()).discard(block_id)
+
+    def check(self, spid: int, block_id: int) -> bool:
+        return block_id in self._table.get(spid, set())
+
+    def entries(self) -> Dict[int, Set[int]]:
+        return {k: set(v) for k, v in self._table.items()}
+
+
+class IOMMUTable:
+    """Per-PCIe-device allowed (block_id, page range) mappings.
+
+    Models the kernel module creating IOMMU page tables for allocated memory
+    (paper §3.3).  Granularity is the allocator page.
+    """
+
+    def __init__(self) -> None:
+        # device_id -> block_id -> set of page indices
+        self._maps: Dict[str, Dict[int, Set[int]]] = {}
+
+    def map(self, device_id: str, block_id: int, page_start: int,
+            npages: int) -> None:
+        pages = self._maps.setdefault(device_id, {}).setdefault(
+            block_id, set())
+        pages.update(range(page_start, page_start + npages))
+
+    def unmap(self, device_id: str, block_id: int, page_start: int,
+              npages: int) -> None:
+        pages = self._maps.get(device_id, {}).get(block_id)
+        if pages:
+            pages.difference_update(range(page_start, page_start + npages))
+
+    def check(self, device_id: str, block_id: int, page: int) -> bool:
+        return page in self._maps.get(device_id, {}).get(block_id, set())
+
+    def mapped_pages(self, device_id: str) -> int:
+        return sum(len(p) for p in self._maps.get(device_id, {}).values())
+
+
+@dataclasses.dataclass
+class JournalEntry:
+    op: str                    # "grant" | "release" | "bind" | "fail" | ...
+    host_id: str
+    block_id: Optional[int] = None
+    detail: str = ""
+
+
+class FabricManager:
+    """FM: binds hosts/devices to expander capacity; single control point."""
+
+    def __init__(self, expander: Expander,
+                 spare: Optional[Expander] = None):
+        self._lock = threading.RLock()
+        self._expander = expander
+        self._spare = spare
+        self._hosts: Dict[str, int] = {}       # host_id -> quota bytes
+        self._devices: Dict[str, DeviceInfo] = {}
+        self._granted: Dict[str, List[BlockGrant]] = {}
+        self.sat = SAT()
+        self.iommu = IOMMUTable()
+        self.journal: List[JournalEntry] = []
+        self._failover_listeners: List[Callable[[], None]] = []
+
+    # -- binding -------------------------------------------------------------
+    def bind_host(self, host_id: str, quota_bytes: Optional[int] = None) -> None:
+        with self._lock:
+            quota = (quota_bytes if quota_bytes is not None
+                     else self._expander.total_bytes)
+            self._hosts[host_id] = quota
+            self._granted.setdefault(host_id, [])
+            self.journal.append(JournalEntry("bind", host_id))
+
+    def set_quota(self, host_id: str, quota_bytes: int) -> None:
+        """Dynamic capacity (DCD): change a host's allowance at runtime."""
+        with self._lock:
+            if host_id not in self._hosts:
+                raise InvalidHandle(f"host {host_id} not bound")
+            self._hosts[host_id] = quota_bytes
+            self.journal.append(
+                JournalEntry("quota", host_id, detail=str(quota_bytes)))
+
+    def register_device(self, info: DeviceInfo) -> None:
+        with self._lock:
+            if info.device_class is DeviceClass.CXL and info.spid is None:
+                raise ValueError("CXL device needs an SPID")
+            self._devices[info.device_id] = info
+
+    def device(self, device_id: str) -> DeviceInfo:
+        info = self._devices.get(device_id)
+        if info is None:
+            raise InvalidHandle(f"device {device_id} not registered")
+        return info
+
+    # -- block grant/release (called by host BlockAllocators) ----------------
+    def request_block(self, host_id: str,
+                      media: MediaKind = MediaKind.DRAM) -> BlockGrant:
+        with self._lock:
+            if host_id not in self._hosts:
+                raise InvalidHandle(f"host {host_id} not bound")
+            held = len(self._granted[host_id]) * BLOCK_BYTES
+            if held + BLOCK_BYTES > self._hosts[host_id]:
+                raise OutOfMemory(
+                    f"host {host_id} quota exceeded "
+                    f"({held + BLOCK_BYTES} > {self._hosts[host_id]})")
+            grant = self._active().grant_block(host_id, media)
+            self._granted[host_id].append(grant)
+            self.journal.append(JournalEntry("grant", host_id, grant.block_id))
+            return grant
+
+    def return_block(self, host_id: str, block_id: int) -> None:
+        with self._lock:
+            grants = self._granted.get(host_id, [])
+            for i, g in enumerate(grants):
+                if g.block_id == block_id:
+                    grants.pop(i)
+                    self._active().release_block(block_id)
+                    self.journal.append(
+                        JournalEntry("release", host_id, block_id))
+                    return
+            raise InvalidHandle(
+                f"host {host_id} does not hold block {block_id}")
+
+    def held_bytes(self, host_id: str) -> int:
+        with self._lock:
+            return len(self._granted.get(host_id, [])) * BLOCK_BYTES
+
+    # -- access control -------------------------------------------------------
+    def authorize(self, device_id: str, block_id: int, page_start: int,
+                  npages: int) -> None:
+        info = self.device(device_id)
+        if info.device_class is DeviceClass.CXL:
+            self.sat.add(info.spid, block_id)
+        else:
+            self.iommu.map(device_id, block_id, page_start, npages)
+
+    def revoke(self, device_id: str, block_id: int, page_start: int,
+               npages: int) -> None:
+        info = self.device(device_id)
+        if info.device_class is DeviceClass.CXL:
+            # SAT is block-granular; only drop when device holds nothing else
+            self.sat.remove(info.spid, block_id)
+        else:
+            self.iommu.unmap(device_id, block_id, page_start, npages)
+
+    def check_access(self, device_id: str, block_id: int, page: int) -> None:
+        info = self.device(device_id)
+        if info.device_class is DeviceClass.CXL:
+            ok = self.sat.check(info.spid, block_id)
+        else:
+            ok = self.iommu.check(device_id, block_id, page)
+        if not ok:
+            raise AccessDenied(
+                f"{device_id} may not access block {block_id} page {page}")
+
+    # -- failure handling -------------------------------------------------------
+    def _active(self) -> Expander:
+        if self._expander.failed and self._spare is not None:
+            return self._spare
+        return self._expander
+
+    def on_failover(self, cb: Callable[[], None]) -> None:
+        self._failover_listeners.append(cb)
+
+    def inject_failure(self) -> None:
+        """Primary expander dies.  With a spare: re-grant every held block on
+        the spare and notify consumers (they must re-populate contents —
+        data loss is the consumer's recovery problem, availability is ours).
+        Without a spare: subsequent requests raise, consumers degrade to
+        onboard-only mode (see LinkedBuffer.degraded)."""
+        with self._lock:
+            self._expander.failed = True
+            self.journal.append(JournalEntry("fail", "*"))
+            if self._spare is None:
+                return
+            for host_id, grants in self._granted.items():
+                regrants = []
+                for g in grants:
+                    ng = self._spare.grant_block(host_id)
+                    regrants.append(ng)
+                    self.journal.append(
+                        JournalEntry("regrant", host_id, ng.block_id,
+                                     detail=f"was {g.block_id}"))
+                self._granted[host_id] = regrants
+        for cb in self._failover_listeners:
+            cb()
+
+    @property
+    def healthy(self) -> bool:
+        return not self._expander.failed or self._spare is not None
+
+    # -- introspection ----------------------------------------------------------
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "hosts": dict(self._hosts),
+                "held_blocks": {h: [g.block_id for g in gs]
+                                for h, gs in self._granted.items()},
+                "free_bytes": self._active().free_bytes(),
+                "journal_len": len(self.journal),
+                "healthy": self.healthy,
+            }
+
+
+def make_default_fabric(pool_gib: int = 64,
+                        spare: bool = False) -> Tuple[FabricManager, Expander]:
+    """One DRAM expander of ``pool_gib`` (+ optional spare), one FM."""
+    exp = Expander([(MediaKind.DRAM, pool_gib * 2**30)])
+    sp = Expander([(MediaKind.DRAM, pool_gib * 2**30)]) if spare else None
+    return FabricManager(exp, spare=sp), exp

@@ -1,0 +1,72 @@
+"""Per-consumer counters for the LMB framework.
+
+Tracks what the paper's evaluation tracks implicitly: how many accesses hit
+the onboard tier vs. went to the linked buffer, and how many bytes moved per
+tier.  Consumers (the serving engine, the optimizer-state pager, tests) read
+these to report hit ratios and to validate locality claims (§4.1.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Dict
+
+
+@dataclasses.dataclass
+class TierCounters:
+    hits: int = 0
+    misses: int = 0
+    bytes_in: int = 0      # bytes paged INTO this tier
+    bytes_out: int = 0     # bytes paged OUT of this tier
+    accesses: int = 0
+
+    @property
+    def hit_ratio(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class Metrics:
+    """Hierarchical counters: consumer -> tier name -> TierCounters."""
+
+    def __init__(self) -> None:
+        self._by_consumer: Dict[str, Dict[str, TierCounters]] = defaultdict(
+            lambda: defaultdict(TierCounters))
+        self._events: list[tuple[float, str, str]] = []
+        self._t0 = time.monotonic()
+
+    def tier(self, consumer: str, tier_name: str) -> TierCounters:
+        return self._by_consumer[consumer][tier_name]
+
+    def record_hit(self, consumer: str, tier_name: str, nbytes: int = 0) -> None:
+        c = self.tier(consumer, tier_name)
+        c.hits += 1
+        c.accesses += 1
+
+    def record_miss(self, consumer: str, tier_name: str, nbytes: int = 0) -> None:
+        c = self.tier(consumer, tier_name)
+        c.misses += 1
+        c.accesses += 1
+
+    def record_move(self, consumer: str, src: str, dst: str, nbytes: int) -> None:
+        self.tier(consumer, src).bytes_out += nbytes
+        self.tier(consumer, dst).bytes_in += nbytes
+
+    def event(self, consumer: str, what: str) -> None:
+        self._events.append((time.monotonic() - self._t0, consumer, what))
+
+    def snapshot(self) -> Dict[str, Dict[str, dict]]:
+        return {
+            consumer: {t: dataclasses.asdict(c) for t, c in tiers.items()}
+            for consumer, tiers in self._by_consumer.items()
+        }
+
+    def reset(self) -> None:
+        self._by_consumer.clear()
+        self._events.clear()
+
+
+#: process-global default registry (consumers may also own private ones)
+GLOBAL_METRICS = Metrics()

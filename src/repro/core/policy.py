@@ -1,0 +1,198 @@
+"""Eviction and prefetch policies for the LinkedBuffer.
+
+The paper's §4.1.2 observes that hot-index locality "considerably dismisses"
+the CXL latency penalty — these policies are what creates that locality: the
+onboard tier is a cache over the linked tier, and the policy decides which
+pages stay onboard.
+
+Policies operate on opaque page keys; the LinkedBuffer calls:
+    on_access(key)   every time a page is touched onboard
+    victim()         when space is needed — returns the page to demote
+    on_insert(key) / on_remove(key)
+The Prefetcher issues lookahead hints (sequential and stride detection —
+fio-style sequential workloads are the paper's best case).
+"""
+
+from __future__ import annotations
+
+import abc
+from collections import OrderedDict
+from typing import Dict, Hashable, List, Optional
+
+
+class EvictionPolicy(abc.ABC):
+    @abc.abstractmethod
+    def on_insert(self, key: Hashable) -> None: ...
+
+    @abc.abstractmethod
+    def on_access(self, key: Hashable) -> None: ...
+
+    @abc.abstractmethod
+    def on_remove(self, key: Hashable) -> None: ...
+
+    @abc.abstractmethod
+    def victim(self) -> Optional[Hashable]: ...
+
+    def pin(self, key: Hashable) -> None:
+        self._pinned().add(key)
+
+    def unpin(self, key: Hashable) -> None:
+        self._pinned().discard(key)
+
+    def _pinned(self) -> set:
+        if not hasattr(self, "_pins"):
+            self._pins = set()
+        return self._pins
+
+
+class LRU(EvictionPolicy):
+    def __init__(self) -> None:
+        self._order: "OrderedDict[Hashable, None]" = OrderedDict()
+
+    def on_insert(self, key: Hashable) -> None:
+        self._order[key] = None
+        self._order.move_to_end(key)
+
+    def on_access(self, key: Hashable) -> None:
+        if key in self._order:
+            self._order.move_to_end(key)
+
+    def on_remove(self, key: Hashable) -> None:
+        self._order.pop(key, None)
+
+    def victim(self) -> Optional[Hashable]:
+        for key in self._order:
+            if key not in self._pinned():
+                return key
+        return None
+
+
+class Clock(EvictionPolicy):
+    """Second-chance CLOCK — cheaper bookkeeping than strict LRU; what an
+    actual firmware/kernel implementation would use."""
+
+    def __init__(self) -> None:
+        self._ref: Dict[Hashable, bool] = {}
+        self._ring: List[Hashable] = []
+        self._hand = 0
+
+    def on_insert(self, key: Hashable) -> None:
+        if key not in self._ref:
+            self._ring.append(key)
+        self._ref[key] = True
+
+    def on_access(self, key: Hashable) -> None:
+        if key in self._ref:
+            self._ref[key] = True
+
+    def on_remove(self, key: Hashable) -> None:
+        if key in self._ref:
+            del self._ref[key]
+            idx = self._ring.index(key)
+            self._ring.pop(idx)
+            if idx < self._hand:
+                self._hand -= 1
+            if self._ring:
+                self._hand %= len(self._ring)
+            else:
+                self._hand = 0
+
+    def victim(self) -> Optional[Hashable]:
+        if not self._ring:
+            return None
+        scanned = 0
+        # two sweeps max: first clears ref bits, second must find a victim
+        while scanned < 2 * len(self._ring):
+            key = self._ring[self._hand]
+            self._hand = (self._hand + 1) % len(self._ring)
+            scanned += 1
+            if key in self._pinned():
+                continue
+            if self._ref.get(key, False):
+                self._ref[key] = False
+            else:
+                return key
+        # everything pinned or referenced: pick first unpinned
+        for key in self._ring:
+            if key not in self._pinned():
+                return key
+        return None
+
+
+class CostAwareLRU(LRU):
+    """LRU weighted by refetch cost: pages that are cheap to refetch (clean,
+    small) are preferred victims over dirty pages that must be written back
+    first.  TPU adaptation detail: a dirty page costs a D2H *and* a later H2D.
+    """
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._dirty: set = set()
+
+    def mark_dirty(self, key: Hashable, dirty: bool = True) -> None:
+        (self._dirty.add if dirty else self._dirty.discard)(key)
+
+    def on_remove(self, key: Hashable) -> None:
+        super().on_remove(key)
+        self._dirty.discard(key)
+
+    def victim(self) -> Optional[Hashable]:
+        # prefer the least-recent CLEAN page; fall back to LRU order
+        for key in self._order:
+            if key in self._pinned():
+                continue
+            if key not in self._dirty:
+                return key
+        return super().victim()
+
+
+def make_policy(name: str) -> EvictionPolicy:
+    return {"lru": LRU, "clock": Clock, "cost": CostAwareLRU}[name]()
+
+
+class Prefetcher:
+    """Sequential/stride prefetcher over page indices.
+
+    ``observe`` consumes the access stream; ``suggest`` returns up to
+    ``depth`` page indices predicted next.  Matches the paper's observation
+    that sequential fio workloads are the friendly case; on TPU the serving
+    engine also feeds *scheduled* future accesses (next decode step's pages),
+    which take priority over the heuristic stream.
+    """
+
+    def __init__(self, depth: int = 4):
+        self.depth = depth
+        self._last: Optional[int] = None
+        self._stride: Optional[int] = None
+        self._confidence = 0
+        self._scheduled: List[int] = []
+
+    def schedule(self, pages: List[int]) -> None:
+        """Exact future knowledge from the scheduler (takes priority)."""
+        self._scheduled.extend(pages)
+
+    def observe(self, page: int) -> None:
+        if self._last is not None:
+            stride = page - self._last
+            if stride != 0:
+                if stride == self._stride:
+                    self._confidence = min(self._confidence + 1, 4)
+                else:
+                    self._stride = stride
+                    self._confidence = 1
+        self._last = page
+
+    def suggest(self, max_page: int) -> List[int]:
+        out: List[int] = []
+        while self._scheduled and len(out) < self.depth:
+            p = self._scheduled.pop(0)
+            if 0 <= p <= max_page:
+                out.append(p)
+        if (len(out) < self.depth and self._confidence >= 2
+                and self._last is not None and self._stride):
+            nxt = self._last
+            for _ in range(self.depth - len(out)):
+                nxt += self._stride
+                if 0 <= nxt <= max_page:
+                    out.append(nxt)
+        return out

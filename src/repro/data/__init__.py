@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticLM, TokenFileDataset
+
+__all__ = ["DataConfig", "SyntheticLM", "TokenFileDataset"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the performance hot spots.
+
+  flash_attention — blocked online-softmax attention (causal/SWA/GQA)
+  rwkv6_scan      — chunked WKV6 with data-dependent decay
+  paged_attention — decode attention through a page table (the LMB/L2P
+                    data path; see DESIGN.md §4)
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle).  Validated with interpret=True on CPU;
+shape/dtype sweeps in tests/test_kernels_*.py.
+"""

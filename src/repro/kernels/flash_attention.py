@@ -1,0 +1,133 @@
+"""Flash attention (fwd) — Pallas TPU kernel.
+
+Blocked online-softmax with causal/SWA block skipping and GQA.
+
+TPU mapping:
+  * grid (B, H, nQ, nK) — the K dimension is the sequential ("arbitrary")
+    axis; running max/sum/accumulator live in VMEM scratch across K steps.
+  * BlockSpecs tile q/o on (block_q, head_dim) and k/v on (block_k,
+    head_dim); head_dim stays whole (128 — MXU-aligned), block_q/block_k
+    default 128/256 to keep the working set
+    (q + k + v + acc + s ≈ (bq + 2·bk)·hd·4 + bq·bk·4 ≈ 0.5 MB) well under
+    the ~16 MB VMEM budget while giving the MXU 128-wide matmuls.
+  * causal/SWA: blocks fully outside the mask are skipped via pl.when
+    (zero compute, not just masked) — the kernel-level equivalent of the
+    XLA path's ``causal_skip`` flag.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref,
+               *, scale: float, block_q: int, block_k: int,
+               seq_len: int, causal: bool, window: Optional[int]):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # block-level skip: any (q, k) work in range?
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window is not None:
+        live = jnp.logical_and(
+            live, k_start + block_k - 1 > q_start - window) \
+            if not isinstance(live, bool) else \
+            (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[...].astype(jnp.float32)            # [bq, hd]
+        k = k_ref[...].astype(jnp.float32)            # [bk, hd]
+        v = v_ref[...].astype(jnp.float32)            # [bk, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale   # [bq, bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_len
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                           # [bq, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)               # [bq, 1]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _out():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q [B,S,H,hd]; k,v [B,S,KV,hd] -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    nq = -(-S // block_q)
+    nk = -(-S // block_k)
+    grid = (B, H, nq, nk)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=1.0 / math.sqrt(hd), block_q=block_q,
+        block_k=block_k, seq_len=S, causal=causal, window=window)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, None, hd),
+                         lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((None, block_k, None, hd),
+                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
+            pl.BlockSpec((None, block_k, None, hd),
+                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, None, hd),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

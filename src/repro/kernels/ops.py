@@ -1,0 +1,51 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU these lower the real kernels; elsewhere they run interpret mode
+(kernel body executed op-by-op on CPU — same math, validated against
+ref.py).  Model code calls these via ``flags.use_kernels``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
+from repro.kernels import rwkv6_scan as _rw
+
+
+@functools.cache
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool = True,
+                    window: Optional[int] = None) -> jax.Array:
+    """[B,S,H,hd] x [B,S,KV,hd] -> [B,S,H,hd]."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=_interpret())
+
+
+def rwkv6_scan(r, k, v, w, u, state, chunk: int = 64
+               ) -> Tuple[jax.Array, jax.Array]:
+    out, st = _rw.rwkv6_scan(r, k, v, w, u, state, chunk=chunk,
+                             interpret=_interpret())
+    return out, st
+
+
+def ssd_scan(xh, dt, A, Bm, Cm, state):
+    """SSD inner scan: the chunked XLA form already IS matmul-blocked;
+    a dedicated Pallas kernel adds nothing until the attention branch is
+    kernelized too, so this dispatches to the shared chunked path."""
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(xh, dt, A, Bm, Cm, state)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, lengths) -> jax.Array:
+    return _pa.paged_attention(q, k_pages, v_pages, page_table, lengths,
+                               interpret=_interpret())

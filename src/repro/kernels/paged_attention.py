@@ -1,0 +1,122 @@
+"""Paged decode attention — Pallas TPU kernel (the LMB data path).
+
+This kernel IS the paper's L2P scenario on a TPU: the KV cache lives in a
+paged pool (HBM tier of the LinkedBuffer); each request's logical sequence
+is scattered across pool pages; the **page table is consulted on every
+access** exactly like the SSD firmware consults its L2P table.  The table
+rides in SMEM via scalar prefetch — the Pallas equivalent of "allocator
+metadata stays host-side / on-board" (§3.2): the lookup never touches the
+paged data tier.
+
+Grid (B, KV, nP): pages are the sequential axis; the online-softmax state
+(m, l, acc per GQA group) lives in VMEM scratch.  Block = one KV page
+[page_tokens, hd] per head — DMA-friendly contiguous reads from the pool,
+regardless of how the logical sequence is fragmented.
+
+Unmapped pages (table entry -1) are clamped to page 0 for the DMA and
+masked out of the softmax — reads are always in-bounds (IOMMU discipline).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, page_tokens: int):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    # pages are allocated densely per request: slot ip is live iff any of
+    # its positions is below the request length (dead pages are skipped,
+    # not just masked — and the clamped table keeps their DMA in-bounds)
+    @pl.when(ip * page_tokens < length)
+    def _body():
+        q = q_ref[...].astype(jnp.float32)          # [G, hd]
+        k = k_ref[...].astype(jnp.float32)          # [T, hd]
+        v = v_ref[...].astype(jnp.float32)          # [T, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())))         # [G, T]
+        pos = ip * page_tokens + \
+            jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ip == np_ - 1)
+    def _out():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale_override", "interpret"))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, lengths: jax.Array,
+                    *, scale_override: float | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """q [B,H,hd]; k/v_pages [P,T,KV,hd]; page_table [B,MP] int32 (-1 =
+    unmapped); lengths [B] -> out [B,H,hd]."""
+    B, H, hd = q.shape
+    P, T, KV, _ = k_pages.shape
+    MP = page_table.shape[1]
+    G = H // KV
+    scale = scale_override or 1.0 / math.sqrt(hd)
+    qs = (q.reshape(B, KV, G, hd) * scale).astype(q.dtype)
+    safe_table = jnp.maximum(page_table, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, MP),
+        in_specs=[
+            pl.BlockSpec((None, None, G, hd),
+                         lambda b, h, ip, tbl, ln: (b, h, 0, 0)),
+            pl.BlockSpec((None, T, None, hd),
+                         lambda b, h, ip, tbl, ln: (tbl[b, ip], 0, h, 0)),
+            pl.BlockSpec((None, T, None, hd),
+                         lambda b, h, ip, tbl, ln: (tbl[b, ip], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, hd),
+                               lambda b, h, ip, tbl, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_pa_kernel, page_tokens=T),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(safe_table, lengths.astype(jnp.int32), qs, k_pages, v_pages)
+    return out.reshape(B, H, hd)
+
+
+def paged_attention_xla(q, k_pages, v_pages, page_table, lengths):
+    """XLA fallback with identical semantics (used off-TPU)."""
+    from repro.kernels.ref import paged_attention_ref
+    return paged_attention_ref(q, k_pages, v_pages, page_table, lengths)

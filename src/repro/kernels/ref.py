@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately the SIMPLEST correct implementations (naive exact
+softmax, per-token recurrence) — slow, obviously right, and independent of
+the chunked/blocked math used by the kernels and the model's XLA path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q [B,S,H,hd]; k,v [B,S,KV,hd] -> [B,S,H,hd].  Exact softmax."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kf) / math.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, vf)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def rwkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, state: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Naive per-token WKV6 recurrence.
+
+    r,k,v,w [B,S,H,N]; u [H,N]; state [B,H,N,N] -> (out [B,S,H,N], state').
+      o_t = r_t (S_{t-1} + diag(u) k_t^T v_t);  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    f32 = jnp.float32
+    r, k, v, w = (a.astype(f32) for a in (r, k, v, w))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp        # [B,H,N]
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        o = jnp.einsum("bhn,bhnm->bhm", rt, s + u[None, ..., None] * kv)
+        s = s * wt[..., None] + kv
+        return s, o
+
+    xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))  # [S,B,H,N]
+    state, outs = jax.lax.scan(step, state.astype(f32), xs)
+    return outs.swapaxes(0, 1), state
+
+
+def ssd_ref(xh: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+            Cm: jax.Array, state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Naive per-token SSD recurrence (see repro.models.ssm)."""
+    f32 = jnp.float32
+    xh, dt, Bm, Cm = (a.astype(f32) for a in (xh, dt, Bm, Cm))
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp       # [B,H,P], [B,H], [B,N], [B,N]
+        a = jnp.exp(dtt * A[None, :])
+        s = s * a[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, y
+
+    xs = (xh.swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bm.swapaxes(0, 1), Cm.swapaxes(0, 1))
+    state, ys = jax.lax.scan(step, state.astype(f32), xs)
+    return ys.swapaxes(0, 1), state
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, page_table: jax.Array,
+                        lengths: jax.Array) -> jax.Array:
+    """Decode attention through a page table (the L2P-lookup analogue).
+
+    q [B,H,hd]; k_pages/v_pages [P, T, KV, hd]; page_table [B, MP] int32
+    (-1 = unmapped); lengths [B] valid token count -> out [B,H,hd].
+    """
+    B, H, hd = q.shape
+    P, T, KV, _ = k_pages.shape
+    MP = page_table.shape[1]
+    G = H // KV
+    safe = jnp.maximum(page_table, 0)
+    k = k_pages[safe]               # [B, MP, T, KV, hd]
+    v = v_pages[safe]
+    k = k.reshape(B, MP * T, KV, hd).astype(jnp.float32)
+    v = v.reshape(B, MP * T, KV, hd).astype(jnp.float32)
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k) / math.sqrt(hd)
+    pos = jnp.arange(MP * T)[None]
+    valid = (pos < lengths[:, None]) & \
+        (jnp.repeat(page_table >= 0, T, axis=1))
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v)
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,109 @@
+"""RWKV-6 chunked WKV scan — Pallas TPU kernel.
+
+The GPU reference (RWKV CUDA kernel) walks tokens serially per thread
+block.  TPU adaptation: process the sequence in chunks of T tokens held in
+VMEM; intra-chunk work becomes [T,T(,N)] matmul/elementwise blocks for the
+MXU/VPU, the [N,N] state is carried in VMEM scratch across the sequential
+grid dimension (same math as ``repro.models.rwkv6.wkv_chunked`` — the two
+are cross-checked in tests, both against the naive-recurrence oracle).
+
+Grid: (B, H, nc) with nc sequential.  Block shapes: r/k/v/logw [T, N];
+VMEM working set ≈ 4·T·N·4 + T·T·N·4 ≈ 1.1 MB at T=64, N=64 — comfortably
+inside VMEM; T=64 keeps the [T,T,N] pairwise-decay tensor the right size
+to trade VPU exp throughput against MXU matmul width.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+                o_ref, sout_ref, state_ref, *, chunk: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+    T = chunk
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = s0_ref[...].astype(jnp.float32)
+
+    r = r_ref[...].astype(jnp.float32)       # [T, N]
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    lw = lw_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)       # [1, N] block
+    state = state_ref[...]                   # [N, N]
+
+    cum = jnp.cumsum(lw, axis=0)             # [T, N] inclusive
+    cum_excl = cum - lw
+    A = jnp.exp(cum_excl)
+
+    # inter-chunk: o_t += (r_t * A_t) @ state
+    r_dec = r * A
+    inter = jax.lax.dot_general(r_dec, state, (((1,), (0,)), ((), ())))
+
+    # intra-chunk (s < t): pairwise exponent diff, all exponents <= 0
+    diff = cum_excl[:, None, :] - cum[None, :, :]          # [T, T, N]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    tri = (s_idx < t_idx)[:, :, None]
+    decay = jnp.exp(jnp.where(tri, diff, -jnp.inf))        # [T, T, N]
+    scores = jnp.einsum("tn,sn,tsn->ts", r, k, decay)
+    intra = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())))
+
+    bonus = jnp.sum(r * (u * k), axis=1, keepdims=True) * v
+
+    o_ref[...] = (inter + intra + bonus).astype(o_ref.dtype)
+
+    # carry: S' = diag(prod_chunk) S + sum_s (prod_{>s} w) k_s v_s
+    total = cum[-1]                                        # [N]
+    k_carry = k * jnp.exp(total[None, :] - cum)
+    state_ref[...] = state * jnp.exp(total)[:, None] + \
+        jax.lax.dot_general(k_carry, v, (((0,), (0,)), ((), ())))
+
+    @pl.when(ic == nc - 1)
+    def _done():
+        sout_ref[...] = state_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, state: jax.Array, *, chunk: int = 64,
+               interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """r,k,v,w [B,S,H,N]; u [H,N]; state [B,H,N,N] -> (out, state')."""
+    B, S, H, N = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    logw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38))
+
+    seq_spec = pl.BlockSpec((None, chunk, None, N),
+                            lambda b, h, c: (b, c, h, 0))
+    out, state_out = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk),
+        grid=(B, H, nc),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((None, N), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((None, None, N, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((None, None, N, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u, state)
+    return out, state_out

@@ -1,0 +1,158 @@
+"""Training launcher: end-to-end driver with checkpointing, fault
+tolerance, straggler detection, and LMB optimizer-state offload.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+        --steps 200 --d-model 256 --layers 8 ...    # ~100M-class run
+
+On CPU this runs a reduced config end-to-end (the integration test path);
+on a pod the same script runs the full config over the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import LMBHost, make_default_fabric
+from repro.core.fabric import DeviceClass, DeviceInfo
+from repro.core.offload import (PINNED_HOST, backend_memory_kinds,
+                                supports_in_jit_offload, tree_put_tier,
+                                nbytes_of, DEVICE)
+from repro.data.pipeline import DataConfig, make_dataset
+from repro.models.flags import Flags
+from repro.models.zoo import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.fault import FailureInjector, StragglerDetector
+from repro.train.loop import make_train_step, opt_state_init
+
+
+def run(arch: str, steps: int = 50, global_batch: int = 8,
+        seq_len: int = 128, ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 25, grad_accum: int = 1,
+        compress_grads: bool = False, offload_opt: bool = False,
+        reduced: bool = True, fail_at: Optional[set] = None,
+        lr: float = 1e-3, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    flags = Flags(remat=False, attn_chunk=seq_len)
+    model = build_model(cfg, flags)
+
+    # --- LMB pool for optimizer-state offload (host tier) ----------------
+    fm, _ = make_default_fabric(pool_gib=4)
+    fm.bind_host("trainer")
+    fm.register_device(DeviceInfo("tpu0", DeviceClass.PCIE))
+    lmb = LMBHost(fm, "trainer")
+    offload_allocs = []
+
+    rng = jax.random.key(0)
+    params = model.init(rng)
+    opt_state = opt_state_init(params, compress_grads)
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(steps // 10, 1),
+                          total_steps=steps)
+    step_fn = jax.jit(make_train_step(model, opt_cfg, grad_accum,
+                                      compress_grads))
+
+    data = make_dataset(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len,
+        global_batch=global_batch))
+
+    start = 0
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        trees, start = restore_checkpoint(
+            ckpt_dir, {"params": params, "opt_state": opt_state})
+        params, opt_state = trees["params"], trees["opt_state"]
+        if verbose:
+            print(f"[train] resumed from step {start}")
+
+    if offload_opt:
+        # park m/v/master in the LMB tier between steps (host-stage mode);
+        # in-jit mode (TPU) annotates shardings instead.  Pool accounting:
+        # regions live inside single 256 MB blocks, so allocate per block.
+        from repro.core.pool import BLOCK_BYTES
+        remaining = max(nbytes_of(opt_state), 1)
+        while remaining > 0:
+            take = min(remaining, BLOCK_BYTES)
+            offload_allocs.append(lmb.lmb_pcie_alloc("tpu0", take))
+            remaining -= take
+        if not supports_in_jit_offload():
+            opt_state = tree_put_tier(opt_state, PINNED_HOST
+                                      if PINNED_HOST in
+                                      backend_memory_kinds() else DEVICE)
+
+    injector = FailureInjector(fail_at)
+    straggler = StragglerDetector()
+    losses = []
+    t_train0 = time.monotonic()
+    for step in range(start, steps):
+        injector.maybe_fail(step)
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        if cfg.encoder_decoder:
+            batch["src_emb"] = jnp.zeros(
+                (batch["tokens"].shape[0], seq_len, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        t0 = time.monotonic()
+        if offload_opt and not supports_in_jit_offload():
+            opt_state = tree_put_tier(opt_state, DEVICE)     # page in
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if offload_opt and not supports_in_jit_offload():
+            opt_state = tree_put_tier(opt_state, PINNED_HOST
+                                      if PINNED_HOST in
+                                      backend_memory_kinds() else DEVICE)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.monotonic() - t0
+        if straggler.observe(dt) and verbose:
+            print(f"[train] step {step}: straggler ({dt:.2f}s)")
+        if verbose and (step % 10 == 0 or step == steps - 1):
+            print(f"[train] step {step} loss={loss:.4f} "
+                  f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1,
+                            {"params": params, "opt_state": opt_state})
+    for a in offload_allocs:
+        lmb.lmb_pcie_free("tpu0", a.mmid)
+    return {
+        "final_loss": losses[-1] if losses else None,
+        "first_loss": losses[0] if losses else None,
+        "losses": losses,
+        "steps": len(losses),
+        "wall_s": time.monotonic() - t_train0,
+        "params": params, "opt_state": opt_state,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--offload-opt", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="full (non-reduced) config — pod hardware")
+    args = ap.parse_args()
+    out = run(args.arch, steps=args.steps, global_batch=args.global_batch,
+              seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+              grad_accum=args.grad_accum,
+              compress_grads=args.compress_grads,
+              offload_opt=args.offload_opt, reduced=not args.full)
+    print(f"[train] done: loss {out['first_loss']:.3f} -> "
+          f"{out['final_loss']:.3f} in {out['steps']} steps "
+          f"({out['wall_s']:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

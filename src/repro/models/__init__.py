@@ -1,0 +1,5 @@
+"""repro.models — the architecture zoo (10 assigned archs)."""
+
+from repro.models.zoo import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,196 @@
+"""GQA attention: train/prefill (chunked, flash-style) and decode paths.
+
+Layouts:
+  x        [B, S, D]
+  q        [B, S, H, hd]        (H = num_heads)
+  k, v     [B, S, KV, hd]       (KV = num_kv_heads; GQA groups G = H/KV)
+  caches   [B, S_max, KV, hd]   (linear) or [B, W, KV, hd] (SWA ring)
+
+The chunked path bounds score memory to O(B * H * chunk * S) and — with
+``flags.causal_skip`` — statically truncates each q-chunk's K range to the
+causal/SWA-reachable prefix, which removes the masked FLOPs from the HLO
+(visible in cost_analysis; this is hillclimb lever #1).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flags import Flags, DEFAULT_FLAGS
+from repro.models.layers import (Params, apply_rope, dense, dense_init,
+                                 dtype_of, head_rms_norm, rope_angles)
+
+
+def attention_init(rng, cfg, cross: bool = False) -> Params:
+    dt = dtype_of(cfg)
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], D, H * hd, dt, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], D, KV * hd, dt, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], D, KV * hd, dt, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], H * hd, D, dt),
+    }
+
+
+def _qkv(p: Params, cfg, x: jax.Array,
+         positions: Optional[jax.Array],
+         rope: bool = True) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = dense(p["wq"], x).reshape(B, S, H, hd)
+    k = dense(p["wk"], x).reshape(B, S, KV, hd)
+    v = dense(p["wv"], x).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q, k = head_rms_norm(q), head_rms_norm(k)
+    if rope and positions is not None:
+        sin, cos = rope_angles(positions, hd, cfg.rope_theta)
+        q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def _scores_softmax_out(q, k, v, mask, scale) -> jax.Array:
+    """q [B,c,KV,G,hd]; k/v [B,Sk,KV,hd]; mask [B,c,Sk] -> [B,c,KV,G,hd]."""
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, k_pos: jax.Array,
+                      *, causal: bool,
+                      window: Optional[int] = None,
+                      flags: Flags = DEFAULT_FLAGS) -> jax.Array:
+    """q [B,Sq,H,hd]; k,v [B,Sk,KV,hd]; positions [B,S*] -> [B,Sq,H,hd]."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    cq = min(flags.attn_chunk, Sq)
+    n = -(-Sq // cq)
+    qg = q.reshape(B, Sq, KV, G, hd)
+
+    outs = []
+    for i in range(n):
+        lo, hi = i * cq, min((i + 1) * cq, Sq)
+        qc = qg[:, lo:hi]
+        qp = q_pos[:, lo:hi]
+        k_lo, k_hi = 0, Sk
+        if flags.causal_skip and causal and Sq == Sk:
+            # static causal truncation: this q-chunk can only see k <= hi-1
+            k_hi = hi
+            if window is not None:
+                k_lo = max(0, lo - window)
+        kc, vc = k[:, k_lo:k_hi], v[:, k_lo:k_hi]
+        kp = k_pos[:, k_lo:k_hi]
+        mask = jnp.ones((B, hi - lo, k_hi - k_lo), bool)
+        if causal:
+            mask &= kp[:, None, :] <= qp[:, :, None]
+        if window is not None:
+            mask &= kp[:, None, :] > (qp[:, :, None] - window)
+        outs.append(_scores_softmax_out(qc, kc, vc, mask, scale))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(B, Sq, H, hd)
+
+
+# --------------------------------------------------------------- public ops
+def attn_forward(p: Params, cfg, x: jax.Array, positions: jax.Array,
+                 *, causal: bool = True, flags: Flags = DEFAULT_FLAGS,
+                 return_kv: bool = False):
+    """Train/prefill attention.  Returns (out, (k, v) if return_kv)."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    if flags.use_kernels and causal:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, window=cfg.sliding_window)
+    else:
+        out = chunked_attention(q, k, v, positions, positions,
+                                causal=causal,
+                                window=cfg.sliding_window if causal else None,
+                                flags=flags)
+    B, S = x.shape[:2]
+    y = dense(p["wo"], out.reshape(B, S, -1))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attn_decode(p: Params, cfg, x: jax.Array,
+                cache_k: jax.Array, cache_v: jax.Array,
+                cache_pos: jax.Array, step: jax.Array,
+                flags: Flags = DEFAULT_FLAGS):
+    """One-token decode against a (linear or ring) KV cache.
+
+    x          [B, 1, D]
+    cache_k/v  [B, C, KV, hd]  (C = S_max, or window size for SWA ring)
+    cache_pos  [B, C] int32    absolute position stored in each slot (-1 empty)
+    step       []    int32     absolute position of the new token
+
+    Returns (y, cache_k, cache_v, cache_pos).
+    """
+    B, _, _ = x.shape
+    C = cache_k.shape[1]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    positions = jnp.broadcast_to(step[None, None], (B, 1))
+    q, k, v = _qkv(p, cfg, x, positions)
+
+    slot = jnp.mod(step, C)  # ring index (== step for linear caches)
+    cache_k = _write_slot(cache_k, k[:, 0], slot)
+    cache_v = _write_slot(cache_v, v[:, 0], slot)
+    cache_pos = _write_slot_scalar(cache_pos, positions[:, 0], slot)
+
+    scale = 1.0 / math.sqrt(hd)
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    valid = cache_pos >= 0
+    mask = valid & (cache_pos <= step)
+    if cfg.sliding_window is not None:
+        mask &= cache_pos > (step - cfg.sliding_window)
+    out = _scores_softmax_out(qg, cache_k, cache_v, mask[:, None, :], scale)
+    y = dense(p["wo"], out.reshape(B, 1, H * hd))
+    return y, cache_k, cache_v, cache_pos
+
+
+def _write_slot(cache: jax.Array, val: jax.Array, slot: jax.Array) -> jax.Array:
+    """cache [B, C, ...], val [B, ...] -> write at ring slot (traced)."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, val[:, None], slot, axis=1)
+
+
+def _write_slot_scalar(cache: jax.Array, val: jax.Array,
+                       slot: jax.Array) -> jax.Array:
+    return jax.lax.dynamic_update_slice_in_dim(cache, val[:, None], slot,
+                                               axis=1)
+
+
+def cross_attn_init(rng, cfg) -> Params:
+    return attention_init(rng, cfg, cross=True)
+
+
+def cross_attn(p: Params, cfg, x: jax.Array, enc_k: jax.Array,
+               enc_v: jax.Array, enc_mask: Optional[jax.Array] = None,
+               flags: Flags = DEFAULT_FLAGS) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V (no RoPE)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = dense(p["wq"], x).reshape(B, S, H, hd)
+    Sk = enc_k.shape[1]
+    qpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    kpos = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk))
+    out = chunked_attention(q, enc_k, enc_v, qpos, kpos, causal=False,
+                            flags=flags)
+    return dense(p["wo"], out.reshape(B, S, -1))
+
+
+def cross_kv(p: Params, cfg, enc_out: jax.Array):
+    """Precompute cross-attention K/V from encoder output."""
+    B, Sk, _ = enc_out.shape
+    KV, hd = cfg.num_kv_heads, cfg.head_dim_
+    k = dense(p["wk"], enc_out).reshape(B, Sk, KV, hd)
+    v = dense(p["wv"], enc_out).reshape(B, Sk, KV, hd)
+    return k, v

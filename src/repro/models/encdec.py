@@ -1,0 +1,146 @@
+"""Encoder–decoder trunk (seamless-m4t): encoder + cross-attending decoder.
+
+The audio frontend is a stub: the encoder consumes precomputed frame
+embeddings [B, S_src, D] (``input_specs`` supplies them).  Decoder layers
+carry self-attention (cached at decode) and cross-attention over encoder
+output (K/V precomputed once at prefill and stored [L, B, S_src, KV, hd]).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.flags import Flags
+from repro.models.layers import Params, rms_norm
+from repro.models.scan_utils import scan_layers
+from repro.models.transformer import (_ffn, init_cache, layer_init,
+                                      stacked_layers_init, trunk_train)
+
+
+def encdec_init(rng, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "enc": stacked_layers_init(k1, cfg, cfg.num_encoder_layers),
+        "dec": stacked_layers_init(k2, cfg, cfg.num_layers, cross=True),
+    }
+
+
+def encode(layers: Params, cfg: ArchConfig, src_emb: jax.Array,
+           flags: Flags) -> jax.Array:
+    B, S, _ = src_emb.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, _ = trunk_train(layers["enc"], cfg, src_emb, positions, flags,
+                       causal=False)
+    return x
+
+
+def _dec_block_train(p: Params, cfg, x, positions, enc_out, flags):
+    xn = rms_norm(p["norm1"], x, cfg.norm_eps)
+    x = x + attn.attn_forward(p["attn"], cfg, xn, positions, causal=True,
+                              flags=flags)
+    ek, ev = attn.cross_kv(p["cross"], cfg, enc_out)
+    xn = rms_norm(p["norm3"], x, cfg.norm_eps)
+    x = x + attn.cross_attn(p["cross"], cfg, xn, ek, ev, flags=flags)
+    y, _ = _ffn(p, cfg, rms_norm(p["norm2"], x, cfg.norm_eps), flags)
+    return x + y
+
+
+def decode_train(layers: Params, cfg: ArchConfig, tgt_emb: jax.Array,
+                 enc_out: jax.Array, flags: Flags) -> jax.Array:
+    """Teacher-forced decoder pass."""
+    B, S, _ = tgt_emb.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, lp):
+        return _dec_block_train(lp, cfg, x, positions, enc_out, flags), None
+
+    from repro.models.transformer import _remat
+    body_fn = _remat(body, flags)
+    x, _ = scan_layers(body_fn, tgt_emb, layers["dec"],
+                       unroll=flags.unroll_layers)
+    return x
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, seq_len: int,
+                      src_len: int) -> Dict[str, Any]:
+    cache = init_cache(cfg, batch, seq_len, n_layers=cfg.num_layers)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim_
+    dt = jnp.dtype(cfg.dtype)
+    cache["cross_k"] = jnp.zeros((cfg.num_layers, batch, src_len, KV, hd), dt)
+    cache["cross_v"] = jnp.zeros((cfg.num_layers, batch, src_len, KV, hd), dt)
+    return cache
+
+
+def prefill(layers: Params, cfg: ArchConfig, tgt_emb: jax.Array,
+            enc_out: jax.Array, cache: Dict[str, Any], flags: Flags):
+    """Encoder output + target prefix -> hidden states + filled caches."""
+    B, S, _ = tgt_emb.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    C = cache["k"].shape[2]
+
+    def body(carry, lp):
+        x = carry
+        xn = rms_norm(lp["norm1"], x, cfg.norm_eps)
+        a, (k, v) = attn.attn_forward(lp["attn"], cfg, xn, positions,
+                                      causal=True, flags=flags,
+                                      return_kv=True)
+        x = x + a
+        ek, ev = attn.cross_kv(lp["cross"], cfg, enc_out)
+        xn = rms_norm(lp["norm3"], x, cfg.norm_eps)
+        x = x + attn.cross_attn(lp["cross"], cfg, xn, ek, ev, flags=flags)
+        y, _ = _ffn(lp, cfg, rms_norm(lp["norm2"], x, cfg.norm_eps), flags)
+        if S < C:   # prompt shorter than cache: pad into the fixed slots
+            k = jnp.zeros((B, C) + k.shape[2:], k.dtype).at[:, :S].set(k)
+            v = jnp.zeros((B, C) + v.shape[2:], v.dtype).at[:, :S].set(v)
+        entries = {"k": k[:, :C], "v": v[:, :C], "cross_k": ek, "cross_v": ev}
+        return x + y, entries
+
+    x, stacked = scan_layers(body, tgt_emb, layers["dec"],
+                             unroll=flags.unroll_layers)
+    new_cache = dict(cache)
+    new_cache.update(stacked)
+    new_cache["step"] = jnp.asarray(S, jnp.int32)
+    slots = jnp.arange(C)
+    pos_row = jnp.where(slots < S, slots, -1).astype(jnp.int32)
+    new_cache["pos"] = jnp.broadcast_to(pos_row[None], (B, C))
+    return x, new_cache
+
+
+def decode_step(layers: Params, cfg: ArchConfig, x: jax.Array,
+                cache: Dict[str, Any], flags: Flags):
+    step = cache["step"]
+    pos_slots = cache["pos"]
+
+    def body(carry, inp):
+        x = carry
+        lp, lc = inp
+        xn = rms_norm(lp["norm1"], x, cfg.norm_eps)
+        a, ck, cv, _ = attn.attn_decode(lp["attn"], cfg, xn, lc["k"],
+                                        lc["v"], pos_slots, step, flags)
+        x = x + a
+        xn = rms_norm(lp["norm3"], x, cfg.norm_eps)
+        x = x + attn.cross_attn(lp["cross"], cfg, xn, lc["cross_k"],
+                                lc["cross_v"], flags=flags)
+        y, _ = _ffn(lp, cfg, rms_norm(lp["norm2"], x, cfg.norm_eps), flags)
+        return x + y, {"k": ck, "v": cv,
+                       "cross_k": lc["cross_k"], "cross_v": lc["cross_v"]}
+
+    layer_keys = ("k", "v", "cross_k", "cross_v")
+    lcs = {k: cache[k] for k in layer_keys}
+    x, new_lcs = scan_layers(body, x, (layers["dec"], lcs),
+                             unroll=flags.unroll_layers)
+    new_cache = dict(cache)
+    new_cache.update(new_lcs)
+    new_cache["step"] = step + 1
+    C = pos_slots.shape[1]
+    slot = jnp.mod(step, C)
+    B = pos_slots.shape[0]
+    new_cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        pos_slots, jnp.broadcast_to(step, (B, 1)).astype(jnp.int32),
+        slot, axis=1)
+    return x, new_cache

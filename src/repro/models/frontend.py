@@ -1,0 +1,32 @@
+"""Modality frontend STUBS (assignment: backbone only).
+
+The audio (seamless) and vision (chameleon VQ) frontends are not part of
+the assigned backbone; these helpers produce the tensors the backbone
+expects so the examples/tests have an end-to-end path:
+
+  * audio  — a deterministic "feature extractor" mapping a raw waveform
+             stand-in to frame embeddings [B, S, D];
+  * vision — a stub VQ tokenizer mapping an image grid to code ids in the
+             (shared, early-fusion) vocabulary.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_frames(rng, batch: int, seq: int, d_model: int,
+                 dtype=jnp.bfloat16) -> jax.Array:
+    """Precomputed frame embeddings (stand-in for w2v-BERT features)."""
+    return (jax.random.normal(rng, (batch, seq, d_model), jnp.float32)
+            * 0.1).astype(dtype)
+
+
+def vq_tokenize(rng, batch: int, grid: int, vocab: int,
+                image_vocab_offset: int = 4096) -> jax.Array:
+    """Stub VQ-VAE: an image becomes grid*grid code ids (early fusion)."""
+    n = grid * grid
+    codes = jax.random.randint(rng, (batch, n), 0,
+                               vocab - image_vocab_offset)
+    return (codes + image_vocab_offset).astype(jnp.int32)

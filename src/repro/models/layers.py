@@ -1,0 +1,177 @@
+"""Shared layers: norms, embeddings, RoPE, MLPs, chunked cross-entropy.
+
+Conventions:
+  * parameters are plain nested dicts of jax.Arrays;
+  * activations flow in ``cfg.dtype`` (bf16 in production), softmax/norm
+    statistics in float32;
+  * every init function takes an ``rng`` and returns the param subtree —
+    dry-run gets shapes via ``jax.eval_shape`` over the same functions.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------------------------------------------- norms
+def rms_norm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(dt)
+
+
+def layer_norm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+def head_rms_norm(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Per-head qk-norm (chameleon), no learned scale."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+# ------------------------------------------------------------- linear init
+def dense_init(rng, d_in: int, d_out: int, dtype,
+               bias: bool = False, scale: Optional[float] = None) -> Params:
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(rng, (d_in, d_out), jnp.float32)
+               * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# --------------------------------------------------------------- embedding
+def embed_init(rng, vocab: int, d: int, dtype) -> Params:
+    return {"table": (jax.random.normal(rng, (vocab, d), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed_lookup(p: Params, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def embed_logits(p: Params, x: jax.Array) -> jax.Array:
+    """Tied readout: x @ table.T"""
+    return x @ p["table"].T
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions [*, S] -> (sin, cos) each [*, S, head_dim/2], float32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [..., S, H, hd]; sin/cos [..., S, hd/2] broadcast over heads."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    s, c = sin[..., None, :], cos[..., None, :]  # add head axis
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------- MLPs
+def mlp_init(rng, cfg) -> Params:
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 3)
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], cfg.d_model, cfg.d_ff, dt),
+            "w_up": dense_init(ks[1], cfg.d_model, cfg.d_ff, dt),
+            "w_down": dense_init(ks[2], cfg.d_ff, cfg.d_model, dt),
+        }
+    return {
+        "w_up": dense_init(ks[0], cfg.d_model, cfg.d_ff, dt),
+        "w_down": dense_init(ks[1], cfg.d_ff, cfg.d_model, dt),
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array, act: str) -> jax.Array:
+    from repro.sharding.constraints import constrain
+    if act == "swiglu":
+        g = jax.nn.silu(dense(p["w_gate"], x))
+        h = constrain(g * dense(p["w_up"], x), "ffn_hidden")
+        return dense(p["w_down"], h)
+    h = constrain(jax.nn.gelu(dense(p["w_up"], x)), "ffn_hidden")
+    return dense(p["w_down"], h)
+
+
+# --------------------------------------------------- chunked cross-entropy
+def chunked_softmax_xent(logits_fn, x: jax.Array, labels: jax.Array,
+                         chunk: int = 512, unroll: bool = True) -> jax.Array:
+    """Mean token cross-entropy without materializing [B, S, V] at once.
+
+    ``logits_fn(x_chunk) -> [B, c, V]``; the sequence axis is processed in
+    chunks so peak memory is O(B * chunk * V).  Vocab may be sharded —
+    the max/sum reductions lower to small collectives.
+    """
+    B, S, _ = x.shape
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    xs = x.reshape(B, n, chunk, -1).swapaxes(0, 1)          # [n, B, c, D]
+    ys = labels.reshape(B, n, chunk).swapaxes(0, 1)         # [n, B, c]
+
+    def body(carry, inp):
+        xc, yc = inp
+        logits = logits_fn(xc).astype(jnp.float32)          # [B, c, V]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    if unroll:
+        total = jnp.float32(0.0)
+        for i in range(n):
+            total, _ = body(total, (xs[i], ys[i]))
+    else:
+        total, _ = jax.lax.scan(body, jnp.float32(0.0), (xs, ys))
+    return total / (B * S)
+
+
+def causal_mask(q_pos: jax.Array, k_pos: jax.Array,
+                window: Optional[int] = None) -> jax.Array:
+    """Boolean [.., Q, K] mask: k attends-able from q (causal, opt. SWA)."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m

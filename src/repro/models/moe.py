@@ -1,0 +1,105 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity dispatch.
+
+GShard/Switch-style einsum formulation — dispatch/combine are one-hot
+matmuls, which (a) compiles cleanly under SPMD (the E axis sharded over the
+model mesh axis emits all-to-alls), and (b) gives deterministic capacity-
+bounded compute, the production norm on TPUs.
+
+dbrx-132b: 16 experts / top-4  → experts shard 1:1 on the 16-way model axis
+mixtral-8x22b: 8 experts / top-2 → E < mesh; the per-expert FFN hidden dim
+  is TP-sharded instead (see sharding rules — divisibility fallback).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, dtype_of
+
+
+def moe_init(rng, cfg) -> Params:
+    dt = dtype_of(cfg)
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(rng, 4)
+    std = 1.0 / jnp.sqrt(D)
+    return {
+        "router": (jax.random.normal(ks[0], (D, E), jnp.float32) * 0.02),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+                   * std).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+                 * std).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                   / jnp.sqrt(F)).astype(dt),
+    }
+
+
+def _top_k_gating(logits: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """logits [T, E] -> (weights [T, k], expert ids [T, k]); softmax over
+    the selected k (dbrx/mixtral convention)."""
+    vals, idx = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(vals.astype(jnp.float32), axis=-1)
+    return w, idx
+
+
+#: tokens per dispatch group — bounds the [g, E, C] one-hot tensors and the
+#: dispatch-einsum FLOPs (GShard groups); capacity is enforced per group.
+GROUP_TOKENS = 1024
+
+
+def moe_apply(p: Params, cfg, x: jax.Array,
+              flags=None) -> Tuple[jax.Array, jax.Array]:
+    """x [B, S, D] -> (y [B, S, D], aux_loss []).
+
+    GShard-style GROUPED capacity dispatch: tokens are split into groups of
+    ``GROUP_TOKENS``; each group routes independently with capacity
+    C = ceil(top_k * g * cf / E).  Groups ride the batch sharding, experts
+    ride the model axis (dbrx) — the dispatch einsum then lowers to the
+    canonical all-to-all.  Overflow tokens pass through on the residual.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * S
+    g = min(getattr(flags, "moe_group", None) or GROUP_TOKENS, T)
+    while T % g:            # shapes are static; find a clean divisor
+        g //= 2
+    G = T // g
+    C = int(-(-K * g * cfg.capacity_factor // E))
+    xt = x.reshape(G, g, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])            # [G, g, E]
+    weights, ids = _top_k_gating(logits, K)                    # [G, g, K]
+
+    # position of each (token, choice) within its expert's per-group capacity
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.int32)           # [G, g, K, E]
+    flat = onehot.reshape(G, g * K, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(G, g, K, E)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)             # [G, g, K]
+    keep = pos < C
+    w = weights * keep
+
+    # dispatch [G, g, E, C]
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                             dtype=x.dtype)[..., :C]           # [G, g, K, C]
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot.astype(x.dtype), slot_oh)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", onehot.astype(jnp.float32),
+                      slot_oh.astype(jnp.float32), w).astype(x.dtype)
+
+    # expert compute: [E, G, C, D] (the G<->E transpose is the all-to-all)
+    xin = jnp.einsum("gtec,gtd->egcd", disp, xt)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, p["w_gate"]))
+        h = h * jnp.einsum("egcd,edf->egcf", xin, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", xin, p["w_up"]))
+    xout = jnp.einsum("egcf,efd->egcd", h, p["w_down"])        # [E, G, C, D]
+
+    y = jnp.einsum("gtec,egcd->gtd", comb, xout).reshape(B, S, D)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=(0, 1))
+    ce = jnp.mean(onehot[:, :, 0].astype(jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return y, aux

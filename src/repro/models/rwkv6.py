@@ -1,0 +1,238 @@
+"""RWKV-6 "Finch": attention-free time-mix with data-dependent decay.
+
+Recurrence (per head, head dim N = rwkv_head_dim):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          S in R^{N x N}
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)      (bonus u for current token)
+
+with w_t in (0,1)^N *data-dependent* (the Finch contribution: w_t from a
+token-shifted low-rank MLP).  We implement the CHUNKED parallel form — the
+TPU-native adaptation (MXU-friendly matmuls instead of a length-S scalar
+loop; same trick the paper's GPU kernel plays with warp tiles):
+
+  within a chunk of length T: cumulative decay products A_t = prod_{<=t} w,
+  intra-chunk contributions via a decay-ratio-masked score matrix, inter-
+  chunk via the carried state.  Chunk math is exercised against the naive
+  recurrence in tests and the Pallas kernel mirrors it block-for-block.
+
+Decode is O(1): one recurrence step on state [B, H, N, N].
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flags import Flags, DEFAULT_FLAGS
+from repro.models.layers import (Params, dense, dense_init, dtype_of,
+                                 rms_norm, rms_norm_init)
+
+
+def rwkv_init(rng, cfg) -> Params:
+    dt = dtype_of(cfg)
+    D = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = D // N
+    ks = jax.random.split(rng, 10)
+    lora = max(32, D // 64)
+    return {
+        # time-mix projections
+        "wr": dense_init(ks[0], D, D, dt),
+        "wk": dense_init(ks[1], D, D, dt),
+        "wv": dense_init(ks[2], D, D, dt),
+        "wg": dense_init(ks[3], D, D, dt),
+        "wo": dense_init(ks[4], D, D, dt),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": jnp.full((D,), -6.0, jnp.float32),
+        "decay_A": dense_init(ks[5], D, lora, dt),
+        "decay_B": dense_init(ks[6], lora, D, dt),
+        "bonus_u": jnp.zeros((H, N), jnp.float32),
+        # token-shift mixing coefficients
+        "mu_r": jnp.full((D,), 0.5, jnp.float32),
+        "mu_k": jnp.full((D,), 0.5, jnp.float32),
+        "mu_v": jnp.full((D,), 0.5, jnp.float32),
+        "mu_g": jnp.full((D,), 0.5, jnp.float32),
+        "mu_w": jnp.full((D,), 0.5, jnp.float32),
+        "ln_x": rms_norm_init(D),
+        # channel-mix
+        "cm_k": dense_init(ks[7], D, cfg.d_ff, dt),
+        "cm_v": dense_init(ks[8], cfg.d_ff, D, dt),
+        "cm_r": dense_init(ks[9], D, D, dt),
+        "mu_ck": jnp.full((D,), 0.5, jnp.float32),
+        "mu_cr": jnp.full((D,), 0.5, jnp.float32),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """shifted(x)_t = x_{t-1}; prev [B, 1, D] supplies x_{-1}."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x * mu + xs * (1.0 - mu)
+
+
+def _rkvwg(p: Params, cfg, x: jax.Array, prev: jax.Array,
+           fuse: bool = False):
+    B, S, D = x.shape
+    N = cfg.rwkv_head_dim
+    H = D // N
+    xs = _token_shift(x, prev)
+    if fuse:
+        # fold mu into the weights: one matmul against x, one against xs
+        # (x/xs are each (all-)gathered ONCE instead of 5x under TP)
+        names = ("wr", "wk", "wv", "wg")
+        mus = (p["mu_r"], p["mu_k"], p["mu_v"], p["mu_g"])
+        dt = x.dtype
+        wx = jnp.concatenate(
+            [(mu[:, None] * p[n]["w"].astype(jnp.float32)).astype(dt)
+             for n, mu in zip(names, mus)]
+            + [(p["mu_w"][:, None]
+                * p["decay_A"]["w"].astype(jnp.float32)).astype(dt)],
+            axis=1)
+        ws = jnp.concatenate(
+            [((1.0 - mu)[:, None] * p[n]["w"].astype(jnp.float32)).astype(dt)
+             for n, mu in zip(names, mus)]
+            + [((1.0 - p["mu_w"])[:, None]
+                * p["decay_A"]["w"].astype(jnp.float32)).astype(dt)],
+            axis=1)
+        fused = x @ wx + xs.astype(x.dtype) @ ws       # [B,S,4D+lora]
+        r, k, v, g, aw = jnp.split(
+            fused, [D, 2 * D, 3 * D, 4 * D], axis=-1)
+    else:
+        r = dense(p["wr"], _mix(x, xs, p["mu_r"]).astype(x.dtype))
+        k = dense(p["wk"], _mix(x, xs, p["mu_k"]).astype(x.dtype))
+        v = dense(p["wv"], _mix(x, xs, p["mu_v"]).astype(x.dtype))
+        g = dense(p["wg"], _mix(x, xs, p["mu_g"]).astype(x.dtype))
+        xw = _mix(x, xs, p["mu_w"]).astype(x.dtype)
+        aw = dense(p["decay_A"], xw)
+    dec = p["decay_w0"] + jnp.tanh(aw.astype(jnp.float32)) \
+        @ p["decay_B"]["w"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec))                                  # (0,1)^D
+    shape = (B, S, H, N)
+    return (r.reshape(shape), k.reshape(shape), v.reshape(shape),
+            jax.nn.silu(g), w.reshape(shape))
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = 64,
+                unroll: bool = False):
+    """Chunked WKV6.  r,k,v,w: [B,S,H,N]; u: [H,N]; state [B,H,N,N].
+
+    Returns (out [B,S,H,N], final state).  All math float32.
+    """
+    B, S, H, N = r.shape
+    T = min(chunk, S)
+    assert S % T == 0, (S, T)
+    nc = S // T
+    f32 = jnp.float32
+    r, k, v, w = (a.astype(f32) for a in (r, k, v, w))
+    logw = jnp.log(jnp.maximum(w, 1e-38))                       # [B,S,H,N]
+    rc = r.reshape(B, nc, T, H, N).swapaxes(0, 1)
+    kc = k.reshape(B, nc, T, H, N).swapaxes(0, 1)
+    vc = v.reshape(B, nc, T, H, N).swapaxes(0, 1)
+    lw = logw.reshape(B, nc, T, H, N).swapaxes(0, 1)
+
+    def body(state, inp):
+        rt, kt, vt, lwt = inp                                   # [B,T,H,N]
+        # cumulative log-decay within the chunk, EXCLUSIVE of position t
+        cum = jnp.cumsum(lwt, axis=1)                           # incl.
+        cum_excl = cum - lwt
+        A = jnp.exp(cum_excl)                                   # prod_{<t}
+        # inter-chunk: o_t += (r_t * A_t) @ state
+        r_dec = rt * A
+        inter = jnp.einsum("bthn,bhnm->bthm", r_dec, state)
+        # intra-chunk: pairs s < t with decay prod_{s<j<t} w_j
+        #   = exp(cum_excl_t - cum_s).  Computed via the PAIRWISE exponent
+        # difference so every exponent is <= 0 (factored forms like
+        # k*exp(-cum) overflow for strong decay).
+        diff = cum_excl[:, :, None] - cum[:, None, :]           # [B,T,T,H,N]
+        tri = jnp.tril(jnp.ones((T, T), bool), k=-1)
+        decay_ts = jnp.exp(jnp.where(tri[None, :, :, None, None], diff,
+                                     -jnp.inf))
+        scores = jnp.einsum("bthn,bshn,btshn->bhts", rt, kt, decay_ts)
+        intra = jnp.einsum("bhts,bshm->bthm", scores, vt)
+        # current-token bonus u
+        bonus = jnp.einsum("bthn,bthn,bthm->bthm",
+                           rt, u[None, None] * kt, vt)
+        out = inter + intra + bonus
+        # state update: S' = diag(prod chunk) S + sum_s (prod_{>s} w) k_s v_s
+        total = cum[:, -1]                                      # [B,H,N]
+        k_carry = kt * jnp.exp(total[:, None] - cum)            # prod_{>s}
+        state = state * jnp.exp(total)[..., None] + \
+            jnp.einsum("bshn,bshm->bhnm", k_carry, vt)
+        return state, out
+
+    if unroll:
+        st = state.astype(f32)
+        outs_l = []
+        for i in range(nc):
+            st, o = body(st, (rc[i], kc[i], vc[i], lw[i]))
+            outs_l.append(o)
+        state, outs = st, jnp.stack(outs_l)
+    else:
+        state, outs = jax.lax.scan(body, state.astype(f32),
+                                   (rc, kc, vc, lw))
+    out = outs.swapaxes(0, 1).reshape(B, S, H, N)
+    return out, state
+
+
+def wkv_step(r, k, v, w, u, state):
+    """One decode step.  r,k,v,w [B,H,N]; state [B,H,N,N] -> (o, state')."""
+    f32 = jnp.float32
+    r, k, v, w = (a.astype(f32) for a in (r, k, v, w))
+    kv = jnp.einsum("bhn,bhm->bhnm", k, v)
+    o = jnp.einsum("bhn,bhnm->bhm", r, state + u[None, ..., None] * kv)
+    state = state * w[..., None] + kv
+    return o, state
+
+
+def time_mix(p: Params, cfg, x: jax.Array, prev_x: jax.Array,
+             state: jax.Array, flags: Flags = DEFAULT_FLAGS,
+             decode: bool = False):
+    """x [B,S,D]; prev_x [B,1,D]; state [B,H,N,N].
+
+    Returns (out [B,S,D], new_prev_x, new_state).
+    """
+    B, S, D = x.shape
+    N = cfg.rwkv_head_dim
+    H = D // N
+    r, k, v, g, w = _rkvwg(p, cfg, x, prev_x,
+                           fuse=getattr(flags, "fuse_rwkv_proj", False))
+    u = p["bonus_u"]
+    if decode:
+        o, state = wkv_step(r[:, 0], k[:, 0], v[:, 0], w[:, 0], u, state)
+        o = o[:, None]
+    else:
+        if flags.use_kernels:
+            from repro.kernels import ops as kops
+            o, state = kops.rwkv6_scan(r, k, v, w, u, state)
+        else:
+            o, state = wkv_chunked(r, k, v, w, u, state,
+                                   chunk=flags.scan_chunk,
+                                   unroll=flags.unroll_scans)
+    o = o.reshape(B, S, D).astype(x.dtype)
+    o = rms_norm(p["ln_x"], o, cfg.norm_eps) * g
+    out = dense(p["wo"], o)
+    return out, x[:, -1:], state
+
+
+def channel_mix(p: Params, cfg, x: jax.Array, prev_x: jax.Array):
+    """RWKV channel-mix (squared-relu FFN with receptance gate)."""
+    from repro.sharding.constraints import constrain
+    xs = _token_shift(x, prev_x)
+    xk = _mix(x, xs, p["mu_ck"]).astype(x.dtype)
+    xr = _mix(x, xs, p["mu_cr"]).astype(x.dtype)
+    h = constrain(jnp.square(jax.nn.relu(dense(p["cm_k"], xk))),
+                  "ffn_hidden")
+    kv = dense(p["cm_v"], h)
+    return jax.nn.sigmoid(dense(p["cm_r"], xr)) * kv, x[:, -1:]
+
+
+def rwkv_state_init(cfg, batch: int, dtype=jnp.float32) -> Tuple:
+    N = cfg.rwkv_head_dim
+    H = cfg.d_model // N
+    return (jnp.zeros((batch, 1, cfg.d_model), dtype),   # time-mix shift
+            jnp.zeros((batch, H, N, N), jnp.float32),    # wkv state
+            jnp.zeros((batch, 1, cfg.d_model), dtype))   # channel-mix shift

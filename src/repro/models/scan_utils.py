@@ -1,0 +1,36 @@
+"""Scan helpers: lax.scan with an optional python-loop unroll.
+
+Unrolled mode exists for two reasons:
+  * **analysis** — XLA's cost_analysis counts a while-loop body once, so
+    the dry-run measures true per-layer cost from unroll@L=2 − scan@L=2;
+  * **perf** — scan-vs-unroll is a real TPU compile-time/ICI-overlap
+    trade-off (§Perf lever).
+Semantics are identical; tests assert bit-equality.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_layers(body: Callable, carry: Any, xs: Any,
+                unroll: bool = False) -> Tuple[Any, Any]:
+    """Like jax.lax.scan(body, carry, xs) with optional python unroll."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    leaves = jax.tree_util.tree_leaves(xs)
+    L = leaves[0].shape[0]
+    ys = []
+    for i in range(L):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree_util.tree_map(
+            lambda *zs: jnp.stack(zs), *ys)
+    else:
+        stacked = None
+    return carry, stacked

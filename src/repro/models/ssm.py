@@ -1,0 +1,179 @@
+"""Selective SSM (Mamba-2/SSD style) — the SSM branch of hymba blocks.
+
+Per head h (P = head channel dim, N = ssm_state):
+
+    h_t = exp(dt_t * A_h) h_{t-1} + dt_t * (x_t ⊗ B_t)     h in R^{P x N}
+    y_t = h_t C_t + D_h x_t
+
+with dt_t data-dependent (softplus), A_h < 0 learned scalars per head, and
+B_t, C_t ∈ R^N input-dependent (the "selective" part).  Decay is scalar per
+(head, t) — the Mamba-2 simplification — which keeps the chunked parallel
+form's decay mask at [T, T, H] (TPU adaptation: block matmuls on the MXU,
+not a length-S scalar scan; see DESIGN.md).
+
+All pairwise decay exponents are differences of cumulative sums and ≤ 0 —
+numerically safe.  Decode is an O(1) state update.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flags import Flags, DEFAULT_FLAGS
+from repro.models.layers import Params, dense, dense_init, dtype_of
+
+CONV_K = 4  # depthwise causal conv kernel width
+
+
+def ssm_init(rng, cfg) -> Params:
+    dt_ = dtype_of(cfg)
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    H = cfg.ssm_heads or max(1, d_in // 64)
+    N = cfg.ssm_state
+    ks = jax.random.split(rng, 6)
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * d_in, dt_),   # [x, gate z]
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, d_in), jnp.float32)
+                   * 0.2).astype(dt_),
+        "conv_b": jnp.zeros((d_in,), dt_),
+        "bc_proj": dense_init(ks[2], d_in, 2 * N, dt_),   # B_t, C_t
+        "dt_proj": dense_init(ks[3], d_in, H, dt_, bias=True),
+        "A_log": jnp.zeros((H,), jnp.float32),            # A = -exp(A_log)
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_in, D, dt_),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 init_state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  x [B,S,C]; w [K,C]; init_state [B,K-1,C].
+
+    Returns (y [B,S,C], new_state [B,K-1,C])."""
+    K = w.shape[0]
+    xp = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else init_state
+    return jax.nn.silu(y + b), new_state
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, state, chunk: int = 64,
+                unroll: bool = False):
+    """Chunked SSD scan.
+
+    xh [B,S,H,P] head inputs; dt [B,S,H]; A [H]; Bm/Cm [B,S,N];
+    state [B,H,P,N].  Returns (y [B,S,H,P], final state).  float32 math.
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    T = min(chunk, S)
+    assert S % T == 0
+    nc = S // T
+    f32 = jnp.float32
+    xh, dt, Bm, Cm = (a.astype(f32) for a in (xh, dt, Bm, Cm))
+    loga = dt * A[None, None, :]                           # [B,S,H]  (<= 0)
+
+    def resh(a, trailing):
+        return a.reshape((B, nc, T) + trailing).swapaxes(0, 1)
+
+    xs = resh(xh, (H, P))
+    dts = resh(dt, (H,))
+    las = resh(loga, (H,))
+    Bs = resh(Bm, (N,))
+    Cs = resh(Cm, (N,))
+
+    def body(state, inp):
+        xc, dtc, lac, Bc, Cc = inp
+        cum = jnp.cumsum(lac, axis=1)                      # [B,T,H] inclusive
+        # inter-chunk: y_t += exp(cum_t) * (state · C_t)
+        inter = jnp.einsum("bhpn,btn->bthp", state, Cc) * \
+            jnp.exp(cum)[..., None]
+        # wait: contribution of carried state to y_t decays by prod_{j<=t} a_j
+        # (state enters before token 1) — exp(cum_t) inclusive is correct.
+        # intra-chunk: s <= t, decay exp(cum_t - cum_s), weight dt_s
+        diff = cum[:, :, None] - cum[:, None, :]           # [B,T,T,H]
+        tri = jnp.tril(jnp.ones((T, T), bool))
+        L = jnp.exp(jnp.where(tri[None, ..., None], diff, -jnp.inf))
+        scores = jnp.einsum("btn,bsn,btsh,bsh->bhts", Cc, Bc, L, dtc)
+        intra = jnp.einsum("bhts,bshp->bthp", scores, xc)
+        y = inter + intra
+        # state carry: h' = exp(total) h + sum_s exp(total - cum_s) dt_s x_s B_s
+        total = cum[:, -1]                                 # [B,H]
+        w_carry = jnp.exp(total[:, None] - cum) * dtc      # [B,T,H]
+        state = state * jnp.exp(total)[..., None, None] + \
+            jnp.einsum("bth,bthp,btn->bhpn", w_carry, xc, Bc)
+        return state, y
+
+    if unroll:
+        st = state.astype(f32)
+        ys_l = []
+        for i in range(nc):
+            st, y_i = body(st, (xs[i], dts[i], las[i], Bs[i], Cs[i]))
+            ys_l.append(y_i)
+        state, ys = st, jnp.stack(ys_l)
+    else:
+        state, ys = jax.lax.scan(body, state.astype(f32),
+                                 (xs, dts, las, Bs, Cs))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P)
+    return y, state
+
+
+def ssd_step(xh, dt, A, Bm, Cm, state):
+    """One decode step.  xh [B,H,P]; dt [B,H]; Bm/Cm [B,N]; state [B,H,P,N]."""
+    f32 = jnp.float32
+    xh, dt, Bm, Cm = (a.astype(f32) for a in (xh, dt, Bm, Cm))
+    a = jnp.exp(dt * A[None, :])                           # [B,H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bm)
+    state = state * a[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm)
+    return y, state
+
+
+def ssm_apply(p: Params, cfg, x: jax.Array, conv_state: jax.Array,
+              ssm_state: jax.Array, flags: Flags = DEFAULT_FLAGS,
+              decode: bool = False):
+    """x [B,S,D]; conv_state [B,K-1,d_in]; ssm_state [B,H,P,N].
+
+    Returns (y [B,S,D], conv_state', ssm_state')."""
+    B, S, D = x.shape
+    d_in = cfg.ssm_expand * D
+    H = cfg.ssm_heads or max(1, d_in // 64)
+    P = d_in // H
+    N = cfg.ssm_state
+
+    xz = dense(p["in_proj"], x)
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xc, p["conv_w"], p["conv_b"], conv_state)
+    bc = dense(p["bc_proj"], xc)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                     # [B,S,N] each
+    dt = jax.nn.softplus(dense(p["dt_proj"], xc).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])
+    xh = xc.reshape(B, S, H, P)
+
+    if decode:
+        y, ssm_state = ssd_step(xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0],
+                                ssm_state)
+        y = y[:, None]
+    else:
+        if flags.use_kernels:
+            from repro.kernels import ops as kops
+            y, ssm_state = kops.ssd_scan(xh, dt, A, Bm, Cm, ssm_state)
+        else:
+            y, ssm_state = ssd_chunked(xh, dt, A, Bm, Cm, ssm_state,
+                                       chunk=flags.scan_chunk,
+                                       unroll=flags.unroll_scans)
+    y = y + xh.astype(jnp.float32) * p["D_skip"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype) * jax.nn.silu(z)
+    return dense(p["out_proj"], y), conv_state, ssm_state
+
+
+def ssm_state_init(cfg, batch: int, dtype=jnp.float32):
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    H = cfg.ssm_heads or max(1, d_in // 64)
+    P = d_in // H
+    return (jnp.zeros((batch, CONV_K - 1, d_in), dtype),
+            jnp.zeros((batch, H, P, cfg.ssm_state), jnp.float32))

@@ -1,0 +1,298 @@
+"""Decoder-only LM trunk: blocks, scan-over-layers, KV caches.
+
+Production choices:
+  * **scan-over-layers** — layer params are stacked on a leading [L] axis
+    and the trunk is one ``jax.lax.scan``: HLO size (and compile time) is
+    O(1) in depth — mandatory for the 88-layer/104B dry-runs.
+  * **remat** — the block body is ``jax.checkpoint``-wrapped under
+    ``flags.remat`` (dots_with_no_batch_dims_saveable policy).
+  * **ring KV caches** — SWA archs keep a window-sized ring buffer
+    (absolute positions tracked per slot), so `long_500k` decode state is
+    O(window), not O(S).
+  * **chunked loss** — the vocab readout is computed in sequence chunks
+    (never materializes [B, S, V]).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DENSE, HYBRID, MOE, RWKV6, ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.flags import Flags, DEFAULT_FLAGS
+from repro.models.layers import (Params, chunked_softmax_xent, dtype_of,
+                                 embed_init, embed_logits, embed_lookup,
+                                 mlp_apply, mlp_init, rms_norm, rms_norm_init)
+from repro.models.scan_utils import scan_layers
+from repro.sharding.constraints import constrain
+
+
+# ---------------------------------------------------------------- layer init
+def layer_init(rng, cfg: ArchConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(rng, 6)
+    p: Params = {"norm1": rms_norm_init(cfg.d_model),
+                 "norm2": rms_norm_init(cfg.d_model)}
+    if cfg.block_type == RWKV6:
+        p["rwkv"] = rwkv_mod.rwkv_init(ks[0], cfg)
+        return p
+    p["attn"] = attn.attention_init(ks[0], cfg)
+    if cfg.block_type == MOE:
+        p["moe"] = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg)
+    if cfg.block_type == HYBRID:
+        p["ssm"] = ssm_mod.ssm_init(ks[2], cfg)
+        p["fuse_norm_a"] = rms_norm_init(cfg.d_model)
+        p["fuse_norm_s"] = rms_norm_init(cfg.d_model)
+    if cross:
+        p["cross"] = attn.cross_attn_init(ks[3], cfg)
+        p["norm3"] = rms_norm_init(cfg.d_model)
+    return p
+
+
+def stacked_layers_init(rng, cfg: ArchConfig, n: int,
+                        cross: bool = False) -> Params:
+    """[L]-stacked layer params (vmapped init = identical structure)."""
+    rngs = jax.random.split(rng, n)
+    return jax.vmap(lambda r: layer_init(r, cfg, cross))(rngs)
+
+
+def _remat(body, flags: Flags):
+    if not flags.remat:
+        return body
+    if flags.remat_policy == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)  # "nothing": recompute everything
+
+
+# -------------------------------------------------------------- block bodies
+def _ffn(p: Params, cfg, x, flags):
+    if cfg.block_type == MOE:
+        y, aux = moe_mod.moe_apply(p["moe"], cfg, x, flags)
+        return y, aux
+    return mlp_apply(p["mlp"], x, cfg.act), jnp.float32(0.0)
+
+
+def block_train(p: Params, cfg: ArchConfig, x: jax.Array,
+                positions: jax.Array, flags: Flags,
+                causal: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence block (training / encoder).  Returns (x, aux_loss)."""
+    if cfg.block_type == RWKV6:
+        B = x.shape[0]
+        x = constrain(x, "residual")
+        prev = jnp.zeros((B, 1, cfg.d_model), x.dtype)
+        st = jnp.zeros((B, cfg.d_model // cfg.rwkv_head_dim,
+                        cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32)
+        h, _, _ = rwkv_mod.time_mix(p["rwkv"], cfg, rms_norm(
+            p["norm1"], x, cfg.norm_eps), prev, st, flags)
+        x = x + h
+        h, _ = rwkv_mod.channel_mix(p["rwkv"], cfg, rms_norm(
+            p["norm2"], x, cfg.norm_eps), prev)
+        return constrain(x + h, "residual"), jnp.float32(0.0)
+    x = constrain(x, "residual")
+    xn = rms_norm(p["norm1"], x, cfg.norm_eps)
+    a = attn.attn_forward(p["attn"], cfg, xn, positions, causal=causal,
+                          flags=flags)
+    if cfg.block_type == HYBRID:
+        B = x.shape[0]
+        cs, ss = ssm_mod.ssm_state_init(cfg, B, x.dtype)
+        s, _, _ = ssm_mod.ssm_apply(p["ssm"], cfg, xn, cs, ss, flags)
+        a = 0.5 * (rms_norm(p["fuse_norm_a"], a, cfg.norm_eps)
+                   + rms_norm(p["fuse_norm_s"], s, cfg.norm_eps))
+    x = x + a
+    y, aux = _ffn(p, cfg, rms_norm(p["norm2"], x, cfg.norm_eps), flags)
+    return constrain(x + y, "residual"), aux
+
+
+def trunk_train(layers: Params, cfg: ArchConfig, x: jax.Array,
+                positions: jax.Array, flags: Flags,
+                causal: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """scan-over-layers trunk for full sequences."""
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = block_train(lp, cfg, x, positions, flags, causal)
+        return (x, aux + a), None
+
+    body_fn = _remat(body, flags)
+    (x, aux), _ = scan_layers(body_fn, (x, jnp.float32(0.0)), layers,
+                              unroll=flags.unroll_layers)
+    return x, aux
+
+
+# ----------------------------------------------------------------- caches
+def cache_len(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
+               n_layers: Optional[int] = None) -> Dict[str, Any]:
+    """Zeroed decode cache (stacked [L] leaves).  pos slots start at -1."""
+    L = n_layers or cfg.num_layers
+    dt = dtype_of(cfg)
+    cache: Dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+    if cfg.block_type == RWKV6:
+        H = cfg.d_model // cfg.rwkv_head_dim
+        N = cfg.rwkv_head_dim
+        cache.update(
+            tmix_prev=jnp.zeros((L, batch, 1, cfg.d_model), dt),
+            wkv=jnp.zeros((L, batch, H, N, N), jnp.float32),
+            cmix_prev=jnp.zeros((L, batch, 1, cfg.d_model), dt))
+        return cache
+    C = cache_len(cfg, seq_len)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim_
+    cache.update(
+        k=jnp.zeros((L, batch, C, KV, hd), dt),
+        v=jnp.zeros((L, batch, C, KV, hd), dt),
+        pos=jnp.full((batch, C), -1, jnp.int32))
+    if cfg.block_type == HYBRID:
+        d_in = cfg.ssm_expand * cfg.d_model
+        H = cfg.ssm_heads or max(1, d_in // 64)
+        P = d_in // H
+        cache.update(
+            conv=jnp.zeros((L, batch, ssm_mod.CONV_K - 1, d_in), dt),
+            ssm=jnp.zeros((L, batch, H, P, cfg.ssm_state), jnp.float32))
+    return cache
+
+
+def _ring_fill(cache_arr: jax.Array, vals: jax.Array, C: int) -> jax.Array:
+    """Write the last C of S computed entries into a ring cache.
+
+    cache_arr [B, C, ...]; vals [B, S, ...] -> ring-ordered cache."""
+    S = vals.shape[1]
+    if C >= S:
+        return vals if C == S else cache_arr.at[:, :S].set(vals)
+    tail = vals[:, S - C:]
+    idx = (jnp.arange(S - C, S) % C)
+    return cache_arr.at[:, idx].set(tail)
+
+
+# ------------------------------------------------------------ prefill/decode
+def block_prefill(p: Params, cfg: ArchConfig, x: jax.Array,
+                  positions: jax.Array, flags: Flags):
+    """Block over the prompt; returns (x, per-layer cache entries)."""
+    if cfg.block_type == RWKV6:
+        B = x.shape[0]
+        prev = jnp.zeros((B, 1, cfg.d_model), x.dtype)
+        st = jnp.zeros((B, cfg.d_model // cfg.rwkv_head_dim,
+                        cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32)
+        xn = rms_norm(p["norm1"], x, cfg.norm_eps)
+        h, tprev, st = rwkv_mod.time_mix(p["rwkv"], cfg, xn, prev, st, flags)
+        x = x + h
+        xn2 = rms_norm(p["norm2"], x, cfg.norm_eps)
+        h, cprev = rwkv_mod.channel_mix(p["rwkv"], cfg, xn2, prev)
+        return x + h, {"tmix_prev": tprev, "wkv": st, "cmix_prev": cprev}
+    xn = rms_norm(p["norm1"], x, cfg.norm_eps)
+    a, (k, v) = attn.attn_forward(p["attn"], cfg, xn, positions,
+                                  causal=True, flags=flags, return_kv=True)
+    entries: Dict[str, Any] = {"k": k, "v": v}
+    if cfg.block_type == HYBRID:
+        B = x.shape[0]
+        cs, ss = ssm_mod.ssm_state_init(cfg, B, x.dtype)
+        s, cs, ss = ssm_mod.ssm_apply(p["ssm"], cfg, xn, cs, ss, flags)
+        a = 0.5 * (rms_norm(p["fuse_norm_a"], a, cfg.norm_eps)
+                   + rms_norm(p["fuse_norm_s"], s, cfg.norm_eps))
+        entries.update(conv=cs, ssm=ss)
+    x = x + a
+    y, _ = _ffn(p, cfg, rms_norm(p["norm2"], x, cfg.norm_eps), flags)
+    return x + y, entries
+
+
+def trunk_prefill(layers: Params, cfg: ArchConfig, x: jax.Array,
+                  positions: jax.Array, flags: Flags, cache: Dict[str, Any]):
+    """Prefill trunk: scan over layers, stacking cache entries [L, ...]."""
+    S = x.shape[1]
+    C = cache["k"].shape[2] if "k" in cache else None
+
+    def body(carry, lp):
+        x, aux = carry
+        x, entries = block_prefill(lp, cfg, x, positions, flags)
+        if "k" in entries and C is not None:
+            entries["k"] = _ring_fill(jnp.zeros_like(cache["k"][0]),
+                                      entries["k"], C)
+            entries["v"] = _ring_fill(jnp.zeros_like(cache["v"][0]),
+                                      entries["v"], C)
+        return (x, aux), entries
+
+    body_fn = _remat(body, flags)
+    (x, _), stacked = scan_layers(body_fn, (x, jnp.float32(0.0)), layers,
+                                  unroll=flags.unroll_layers)
+    new_cache = dict(cache)
+    new_cache.update(stacked)
+    new_cache["step"] = jnp.asarray(S, jnp.int32)
+    if "pos" in cache:
+        pos = jnp.broadcast_to(positions[:, :], positions.shape)
+        new_cache["pos"] = _ring_fill(cache["pos"], pos,
+                                      cache["pos"].shape[1])
+    return x, new_cache
+
+
+def block_decode(p: Params, cfg: ArchConfig, x: jax.Array,
+                 layer_cache: Dict[str, Any], pos_slots: jax.Array,
+                 step: jax.Array, flags: Flags):
+    """One-token decode for one layer.  Returns (x, updated layer cache)."""
+    if cfg.block_type == RWKV6:
+        xn = rms_norm(p["norm1"], x, cfg.norm_eps)
+        h, tprev, wkv = rwkv_mod.time_mix(
+            p["rwkv"], cfg, xn, layer_cache["tmix_prev"],
+            layer_cache["wkv"], flags, decode=True)
+        x = x + h
+        xn2 = rms_norm(p["norm2"], x, cfg.norm_eps)
+        h, cprev = rwkv_mod.channel_mix(p["rwkv"], cfg, xn2,
+                                        layer_cache["cmix_prev"])
+        return x + h, {"tmix_prev": tprev, "wkv": wkv, "cmix_prev": cprev}
+    xn = rms_norm(p["norm1"], x, cfg.norm_eps)
+    a, ck, cv, cpos = attn.attn_decode(
+        p["attn"], cfg, xn, layer_cache["k"], layer_cache["v"],
+        pos_slots, step, flags)
+    out_cache: Dict[str, Any] = {"k": ck, "v": cv}
+    if cfg.block_type == HYBRID:
+        s, cs, ss = ssm_mod.ssm_apply(p["ssm"], cfg, xn, layer_cache["conv"],
+                                      layer_cache["ssm"], flags, decode=True)
+        a = 0.5 * (rms_norm(p["fuse_norm_a"], a, cfg.norm_eps)
+                   + rms_norm(p["fuse_norm_s"], s, cfg.norm_eps))
+        out_cache.update(conv=cs, ssm=ss)
+    x = x + a
+    y, _ = _ffn(p, cfg, rms_norm(p["norm2"], x, cfg.norm_eps), flags)
+    return x + y, out_cache
+
+
+def trunk_decode(layers: Params, cfg: ArchConfig, x: jax.Array,
+                 cache: Dict[str, Any], flags: Flags):
+    """Scan over layers threading per-layer caches; returns (x, cache)."""
+    step = cache["step"]
+    pos_slots = cache.get("pos")
+    layer_keys = [k for k in cache if k not in ("step", "pos")]
+    layer_caches = {k: cache[k] for k in layer_keys}
+
+    def body(carry, inp):
+        x = carry
+        lp, lc = inp
+        x, new_lc = block_decode(lp, cfg, x, lc, pos_slots, step, flags)
+        return x, new_lc
+
+    x, new_layer_caches = scan_layers(body, x, (layers, layer_caches),
+                                      unroll=flags.unroll_layers)
+    new_cache = dict(cache)
+    new_cache.update(new_layer_caches)
+    new_cache["step"] = step + 1
+    if pos_slots is not None:
+        C = pos_slots.shape[1]
+        slot = jnp.mod(step, C)
+        B = pos_slots.shape[0]
+        new_cache["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            pos_slots, jnp.broadcast_to(step, (B, 1)).astype(jnp.int32),
+            slot, axis=1)
+    return x, new_cache

@@ -1,0 +1,160 @@
+"""Model facade: init / loss / prefill / decode_step / input_specs.
+
+``build_model(cfg, flags)`` returns a ``Model`` whose methods are pure
+functions of (params, batch) — ready for ``jax.jit`` with shardings.
+``input_specs(shape_name)`` returns ShapeDtypeStruct stand-ins for every
+input of the step that shape cell lowers (the dry-run contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (DENSE, HYBRID, MOE, RWKV6, ArchConfig,
+                                ShapeConfig, SHAPES)
+from repro.models import encdec as encdec_mod
+from repro.models.flags import Flags, DEFAULT_FLAGS
+from repro.models.layers import (chunked_softmax_xent, dtype_of, embed_init,
+                                 embed_logits, embed_lookup, rms_norm,
+                                 rms_norm_init)
+from repro.models.transformer import (init_cache, stacked_layers_init,
+                                      trunk_decode, trunk_prefill,
+                                      trunk_train)
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    flags: Flags = DEFAULT_FLAGS
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_emb, k_layers, k_out = jax.random.split(rng, 3)
+        params: Dict[str, Any] = {
+            "embed": embed_init(k_emb, cfg.padded_vocab, cfg.d_model,
+                                dtype_of(cfg)),
+            "final_norm": rms_norm_init(cfg.d_model),
+        }
+        if cfg.encoder_decoder:
+            params["trunk"] = encdec_mod.encdec_init(k_layers, cfg)
+        else:
+            params["trunk"] = stacked_layers_init(k_layers, cfg,
+                                                  cfg.num_layers)
+        return params
+
+    def abstract_params(self) -> Dict[str, Any]:
+        """Parameter ShapeDtypeStructs without allocating (dry-run)."""
+        return jax.eval_shape(
+            lambda seed: self.init(jax.random.key(seed)),
+            jax.ShapeDtypeStruct((), jnp.int32))
+
+    # ------------------------------------------------------------------ loss
+    def _readout(self, params, x: jax.Array) -> jax.Array:
+        xn = rms_norm(params["final_norm"], x, self.cfg.norm_eps)
+        return embed_logits(params["embed"], xn)
+
+    def loss(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg, flags = self.cfg, self.flags
+        labels = batch["labels"]
+        if cfg.encoder_decoder:
+            enc_out = encdec_mod.encode(params["trunk"], cfg,
+                                        batch["src_emb"], flags)
+            tgt = embed_lookup(params["embed"], batch["tokens"])
+            x = encdec_mod.decode_train(params["trunk"], cfg, tgt, enc_out,
+                                        flags)
+            aux = jnp.float32(0.0)
+        else:
+            x = embed_lookup(params["embed"], batch["tokens"])
+            B, S = batch["tokens"].shape
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            x, aux = trunk_train(params["trunk"], cfg, x, positions, flags)
+        xn = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        xent = chunked_softmax_xent(
+            lambda xc: embed_logits(params["embed"], xc), xn, labels,
+            chunk=min(self.flags.loss_chunk, labels.shape[1]),
+            unroll=self.flags.unroll_loss)
+        return xent + AUX_LOSS_WEIGHT * aux
+
+    # --------------------------------------------------------------- prefill
+    def init_cache(self, batch: int, seq_len: int,
+                   src_len: Optional[int] = None) -> Dict[str, Any]:
+        if self.cfg.encoder_decoder:
+            return encdec_mod.init_encdec_cache(self.cfg, batch, seq_len,
+                                                src_len or seq_len)
+        return init_cache(self.cfg, batch, seq_len)
+
+    def prefill(self, params, batch: Dict[str, jax.Array],
+                cache: Dict[str, Any]):
+        """Prompt pass; returns (last-token logits [B, V], filled cache)."""
+        cfg, flags = self.cfg, self.flags
+        if cfg.encoder_decoder:
+            enc_out = encdec_mod.encode(params["trunk"], cfg,
+                                        batch["src_emb"], flags)
+            tgt = embed_lookup(params["embed"], batch["tokens"])
+            x, cache = encdec_mod.prefill(params["trunk"], cfg, tgt, enc_out,
+                                          cache, flags)
+        else:
+            tokens = batch["tokens"]
+            B, S = tokens.shape
+            x = embed_lookup(params["embed"], tokens)
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            x, cache = trunk_prefill(params["trunk"], cfg, x, positions,
+                                     flags, cache)
+        logits = self._readout(params, x[:, -1:])[:, 0]
+        return logits, cache
+
+    # ---------------------------------------------------------------- decode
+    def decode_step(self, params, cache: Dict[str, Any],
+                    token: jax.Array):
+        """token [B, 1] int32 -> (logits [B, V], updated cache)."""
+        cfg, flags = self.cfg, self.flags
+        x = embed_lookup(params["embed"], token)
+        if cfg.encoder_decoder:
+            x, cache = encdec_mod.decode_step(params["trunk"], cfg, x, cache,
+                                              flags)
+        else:
+            x, cache = trunk_decode(params["trunk"], cfg, x, cache, flags)
+        logits = self._readout(params, x)[:, 0]
+        return logits, cache
+
+    # ------------------------------------------------------------- dry specs
+    def input_specs(self, shape: ShapeConfig | str) -> Dict[str, Any]:
+        """ShapeDtypeStructs for the step this shape cell lowers."""
+        if isinstance(shape, str):
+            shape = SHAPES[shape]
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        dt = dtype_of(cfg)
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            specs = {"tokens": tok, "labels": tok}
+            if cfg.encoder_decoder:
+                specs["src_emb"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                        dt)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": tok}
+            if cfg.encoder_decoder:
+                specs["src_emb"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                        dt)
+            return specs
+        if shape.kind == "decode":
+            return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        raise ValueError(shape.kind)
+
+    def cache_specs(self, shape: ShapeConfig | str) -> Dict[str, Any]:
+        if isinstance(shape, str):
+            shape = SHAPES[shape]
+        return jax.eval_shape(
+            lambda: self.init_cache(shape.global_batch, shape.seq_len))
+
+
+def build_model(cfg: ArchConfig, flags: Flags = DEFAULT_FLAGS) -> Model:
+    return Model(cfg, flags)

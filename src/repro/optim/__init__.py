@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import ef_compress_tree
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "ef_compress_tree"]

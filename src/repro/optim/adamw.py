@@ -1,0 +1,95 @@
+"""AdamW with fp32 master copies for low-precision params.
+
+Pure-pytree implementation (no optax in this environment).  The optimizer
+state is the tensor that outgrows device memory in training (2–3× params in
+fp32) — exactly the paper's "index that doesn't fit on-board"; the LMB
+integration (state offloaded to the host pool, paged per layer) lives in
+``repro.train.loop`` / ``repro.core.offload``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * \
+        (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.minimum(warm, cos)
+
+
+def adamw_init(params: Any) -> Dict[str, Any]:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    master = jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.float32), params)
+    return {
+        "m": jax.tree_util.tree_map(f32, params),
+        "v": jax.tree_util.tree_map(f32, params),
+        "master": master,
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, state: Dict[str, Any],
+                 params: Any) -> Tuple[Any, Dict[str, Any], Dict[str, Any]]:
+    """One step.  Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** c
+    bc2 = 1 - b2 ** c
+
+    def upd(g, m, v, master, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        step_ = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        decay = cfg.weight_decay if master.ndim >= 2 else 0.0
+        master = master - lr * (step_ + decay * master)
+        return m, v, master, master.astype(p.dtype)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_ma = treedef.flatten_up_to(state["master"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(*t) for t in zip(flat_g, flat_m, flat_v, flat_ma, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_ma = treedef.unflatten([o[2] for o in out])
+    new_p = treedef.unflatten([o[3] for o in out])
+    new_state = {"m": new_m, "v": new_v, "master": new_ma, "count": count}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,48 @@
+"""Gradient compression with error feedback (large-scale DP option).
+
+int8 per-tensor-scaled quantization with an error-feedback residual: the
+update applied is ``Q(g + e)`` and ``e' = (g + e) - Q(g + e)``.  On a real
+multi-host mesh this wraps the data-parallel all-reduce (quantize →
+reduce → dequantize) via shard_map; here the quantizer is exact-shape
+functional so the training loop and tests exercise the numerics, and the
+dry-run measures the collective-bytes reduction (4x over fp32) in §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (decompressed update, new error residual)."""
+    t = g.astype(jnp.float32) + err
+    q, s = _quant_int8(t)
+    d = _dequant(q, s)
+    return d.astype(g.dtype), t - d
+
+
+def ef_compress_tree(grads: Any, err_tree: Any) -> Tuple[Any, Any]:
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err_tree)
+    outs = [ef_compress(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def ef_state_init(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

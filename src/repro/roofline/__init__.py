@@ -1,0 +1,4 @@
+from repro.roofline.analysis import (collective_bytes_per_device,
+                                     roofline_terms, model_flops)
+
+__all__ = ["collective_bytes_per_device", "roofline_terms", "model_flops"]

@@ -1,0 +1,163 @@
+"""Three-term roofline from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` supplies FLOPs / bytes for the whole (global) program.
+Collective bytes are NOT in cost_analysis: we parse the post-SPMD HLO and
+sum result-shape bytes of every collective op, weighted per op kind by the
+ring-traffic factor (all-reduce moves ~2x its tensor size per device;
+gather/scatter/permute/all-to-all ~1x).  The post-SPMD module is
+per-device, so Σ(weighted bytes) is per-device link traffic; multiplying
+by chips gives the global ``collective_bytes`` of the formula (the two
+chip factors cancel — the term equals per-device-bytes / link_bw).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.tiers import TPU_HBM_BW_Bps, TPU_ICI_BW_Bps, TPU_PEAK_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+#: per-device ring traffic multiplier by collective kind
+_TRAFFIC_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(([^()]*)\)|([a-z0-9_\[\],{}:#\s]*?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> List[Tuple[str, int]]:
+    """[(kind, result_bytes)] for every collective in the HLO module."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        if "-start" in line and f"{kind}-done" in hlo_text:
+            pass  # async pair: count only the -start
+        if f"{kind}-done(" in line:
+            continue
+        type_str = m.group(1) or m.group(2) or ""
+        nbytes = _shape_bytes(type_str)
+        if nbytes:
+            out.append((kind, nbytes))
+    return out
+
+
+def collective_bytes_per_device(hlo_text: str) -> Dict[str, float]:
+    per_kind: Dict[str, float] = {}
+    for kind, nbytes in parse_collectives(hlo_text):
+        per_kind[kind] = per_kind.get(kind, 0.0) + \
+            nbytes * _TRAFFIC_FACTOR[kind]
+    per_kind["total"] = sum(v for k, v in per_kind.items() if k != "total")
+    return per_kind
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes_per_dev: float
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline (no-overlap upper bound ≈ max; report max term)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU at the roofline bound."""
+        ideal = self.model_flops / (self.chips * TPU_PEAK_FLOPS)
+        return ideal / self.step_time_s if self.step_time_s else 0.0
+
+    def row(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "chips": self.chips,
+        }
+
+
+def roofline_terms(cost: dict, hlo_text: str, chips: int,
+                   model_flops: float = 0.0) -> RooflineTerms:
+    """``cost`` comes from the post-SPMD (per-device) module — verified
+    empirically: an N-way-sharded matmul reports total/N flops.  So
+    HLO_FLOPs(global) = per_device * chips, and the chips factor in each
+    term's denominator cancels against it."""
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes_per_device(hlo_text)["total"]
+    return RooflineTerms(
+        compute_s=flops_dev / TPU_PEAK_FLOPS,
+        memory_s=bytes_dev / TPU_HBM_BW_Bps,
+        collective_s=coll / TPU_ICI_BW_Bps,
+        hlo_flops=flops_dev * chips, hlo_bytes=bytes_dev * chips,
+        coll_bytes_per_dev=coll,
+        chips=chips, model_flops=model_flops)
+
+
+def model_flops(cfg, shape, kind: Optional[str] = None) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference fwd), N = active."""
+    n_active = cfg.active_param_count()
+    kind = kind or shape.kind
+    tokens = shape.global_batch * (shape.seq_len if kind != "decode" else 1)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens

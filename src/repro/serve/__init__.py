@@ -1,0 +1,4 @@
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.kv_cache import PagedKVStore
+
+__all__ = ["EngineConfig", "Request", "ServeEngine", "PagedKVStore"]

@@ -1,0 +1,143 @@
+"""Paged KV storage on a LinkedBuffer — the LMB applied to serving.
+
+A request's KV state is chopped into **KV pages** (``page_tokens`` tokens
+of all layers' K+V at once) and stored as LinkedBuffer logical pages:
+
+  * the working set of ACTIVE requests stays in the onboard (HBM) tier;
+  * preempted / waiting requests' KV parks in the LMB pool (the paper's
+    "exchange time for space"): admission capacity is the POOL size, not
+    HBM;
+  * prefix sharing = LinkedBuffer.share (zero-copy, copy-on-write) — the
+    paper's shared-buffer SSD→accelerator scenario;
+  * swap-in cost is predicted with the tier model so the scheduler can
+    decide hide-or-stall (repro.core.tiers.hideable_page_bytes).
+
+Layout per logical page: [L, 2, page_tokens, KV, hd] (K and V stacked) —
+one DMA per page move, layer-major so a layer-by-layer decode can stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import LMBHost
+from repro.core.buffer import LinkedBuffer
+from repro.core.offload import TierExecutor
+
+
+@dataclasses.dataclass
+class SeqPages:
+    """Page bookkeeping for one sequence."""
+
+    seq_id: int
+    pages: List[int] = dataclasses.field(default_factory=list)
+    length: int = 0
+
+
+class PagedKVStore:
+    def __init__(self, *, cfg, host: LMBHost, device_id: str,
+                 page_tokens: int = 64, onboard_pages: int = 64,
+                 n_layers: Optional[int] = None,
+                 compress_cold: bool = False,
+                 executor: Optional[TierExecutor] = None):
+        self.cfg = cfg
+        L = n_layers or cfg.num_layers
+        KV, hd = cfg.num_kv_heads, cfg.head_dim_
+        self.page_tokens = page_tokens
+        self.page_shape = (L, 2, page_tokens, KV, hd)
+        self.buf = LinkedBuffer(
+            name=f"kv:{device_id}", device_id=device_id, host=host,
+            executor=executor, page_shape=self.page_shape,
+            dtype=jnp.dtype(cfg.dtype), onboard_pages=onboard_pages,
+            policy="cost", prefetch_depth=2,
+            compress_lmb=compress_cold)
+        self._seqs: Dict[int, SeqPages] = {}
+        self._next_id = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def new_seq(self) -> int:
+        sid = self._next_id
+        self._next_id += 1
+        self._seqs[sid] = SeqPages(sid)
+        return sid
+
+    def seq(self, sid: int) -> SeqPages:
+        return self._seqs[sid]
+
+    def free_seq(self, sid: int) -> None:
+        for p in self._seqs[sid].pages:
+            self.buf.release(p)
+        del self._seqs[sid]
+
+    def fork(self, sid: int) -> int:
+        """Zero-copy prefix share: new sequence maps the same pages (COW
+        on write) — the Table-2 ``share`` scenario."""
+        new = self.new_seq()
+        src = self._seqs[sid]
+        dst = self._seqs[new]
+        dst.pages = [self.buf.share(p) for p in src.pages]
+        dst.length = src.length
+        return new
+
+    # ------------------------------------------------------------ data path
+    def append_tokens(self, sid: int, kv: jax.Array) -> None:
+        """kv [L, 2, T, KV, hd] for T new tokens (T <= page_tokens each
+        call from decode; prefill calls in page-sized slabs)."""
+        seq = self._seqs[sid]
+        T = kv.shape[2]
+        done = 0
+        while done < T:
+            off = seq.length % self.page_tokens
+            if off == 0:
+                seq.pages.extend(self.buf.append_pages(1))
+            page = seq.pages[-1]
+            take = min(self.page_tokens - off, T - done)
+            cur = self.buf.read(page)
+            cur = jax.lax.dynamic_update_slice_in_dim(
+                cur, kv[:, :, done:done + take], off, axis=2)
+            self.buf.write(page, cur)
+            seq.length += take
+            done += take
+
+    def gather_seq(self, sid: int) -> jax.Array:
+        """Materialize a sequence's KV [L, 2, len_padded, KV, hd] onboard
+        (used for swap-in to a dense decode slot)."""
+        seq = self._seqs[sid]
+        if not seq.pages:
+            return jnp.zeros(self.page_shape, self.buf.dtype)[:, :, :0]
+        stacked = self.buf.gather(seq.pages)       # [n, L, 2, T, KV, hd]
+        n = stacked.shape[0]
+        L, _, T, KV, hd = self.page_shape
+        return jnp.moveaxis(stacked, 0, 2).reshape(L, 2, n * T, KV, hd)
+
+    def pin_seq(self, sid: int) -> None:
+        for p in self._seqs[sid].pages:
+            self.buf.pin(p)
+
+    def unpin_seq(self, sid: int) -> None:
+        for p in self._seqs[sid].pages:
+            self.buf.unpin(p)
+
+    def schedule_swap_in(self, sid: int) -> None:
+        self.buf.schedule_prefetch(self._seqs[sid].pages)
+
+    # ----------------------------------------------------------- accounting
+    def stats(self) -> dict:
+        st = self.buf.stats()
+        st["sequences"] = len(self._seqs)
+        st["page_tokens"] = self.page_tokens
+        return st
+
+    def page_table(self, sid: int, max_pages: int) -> np.ndarray:
+        """int32 [max_pages] logical page ids (-1 pad) — feeds the Pallas
+        paged-attention kernel on TPU."""
+        seq = self._seqs[sid]
+        out = np.full((max_pages,), -1, np.int32)
+        out[:len(seq.pages)] = seq.pages[:max_pages]
+        return out

@@ -1,0 +1,6 @@
+from repro.sharding.partition import (batch_sharding, batch_spec,
+                                      cache_shardings, param_shardings,
+                                      spec_report)
+
+__all__ = ["batch_sharding", "batch_spec", "cache_shardings",
+           "param_shardings", "spec_report"]

@@ -1,0 +1,71 @@
+"""Activation sharding constraints (Megatron-SP style), context-scoped.
+
+XLA's sharding propagation sometimes replicates large intermediates (we
+observed 4 GiB [B,S,d_ff] all-reduces in the rwkv trunk).  The fix is
+standard: pin the key activations —
+
+  residual stream   [B, S, D]  -> (batch, "model", None)   seq-sharded SP
+  ffn hidden        [B, S, F]  -> (batch, None, "model")
+  attention heads   [B, S, H*hd] -> (batch, None, "model")
+
+Model code calls ``constrain(x, "residual")`` etc.; without an active mesh
+(smoke tests, single device) it's a no-op.  The dry-run activates it with
+``activation_mesh(mesh)``.  Every constraint validates divisibility and
+silently degrades to fewer/no named axes (hymba's 25 heads etc.).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: contextvars.ContextVar[Optional[Mesh]] = \
+    contextvars.ContextVar("activation_mesh", default=None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh]):
+    tok = _ACTIVE.set(mesh)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def _bat(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape.get(a, 1)
+    return dim % n == 0
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    mesh = _ACTIVE.get()
+    if mesh is None or x.ndim < 2:
+        return x
+    B = x.shape[0]
+    bat = _bat(mesh)
+    b_ax = bat if _fits(B, mesh, bat) else \
+        (("data",) if _fits(B, mesh, ("data",)) else None)
+    if x.ndim == 2:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(b_ax, None)))
+    S, D = x.shape[1], x.shape[-1]
+    mid = [None] * (x.ndim - 3)
+    if kind == "residual":
+        s_ax = "model" if (S > 1 and _fits(S, mesh, "model")) else None
+        spec = P(b_ax, s_ax, *mid, None)
+    elif kind in ("ffn_hidden", "heads"):
+        d_ax = "model" if _fits(D, mesh, "model") else None
+        spec = P(b_ax, None, *mid, d_ax)
+    else:
+        raise ValueError(kind)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

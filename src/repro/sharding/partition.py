@@ -1,0 +1,281 @@
+"""PartitionSpec rules: DP / TP / EP / SP with divisibility fallback.
+
+Strategy (GSPMD + NamedSharding; mesh axes ``("pod",) "data", "model"``):
+
+  * **DP** — batch over ``(pod, data)``; gradients all-reduce over it.
+  * **TP (megatron)** — attention Q heads and FFN hidden column-parallel on
+    ``model``; output projections row-parallel (psum).  GQA KV projections
+    replicate when ``kv_heads % model_size != 0`` (the standard GQA-TP
+    choice — KV projections are small).
+  * **EP** — MoE expert axis on ``model`` when ``E % model_size == 0``
+    (dbrx 16e); otherwise per-expert FFN hidden TP (mixtral 8e).
+  * **SP (decode)** — KV-cache sequence dim on ``model`` (KV heads rarely
+    divide 16); for ``long_500k`` (batch=1) the cache seq dim also takes
+    ``data`` so the data axis isn't idle.
+
+Every rule is validated against the actual dim size: a non-divisible axis
+falls back to replication (e.g. hymba's 25 heads, qwen2's 12) — recorded by
+``spec_report`` so the dry-run output shows exactly what sharded how.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+_REPORT: List[Tuple[str, Tuple[int, ...], P]] = []
+
+
+def mesh_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis] if axis in mesh.shape else 1
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """Spec for [B, ...] inputs; replicates B if it doesn't divide."""
+    ax = batch_axes(mesh)
+    n = int(np.prod([mesh_size(mesh, a) for a in ax]))
+    if batch % n == 0:
+        return P(ax, *([None] * extra_dims))
+    # try data-only
+    if batch % mesh_size(mesh, "data") == 0:
+        return P("data", *([None] * extra_dims))
+    return P(*([None] * (extra_dims + 1)))
+
+
+def batch_sharding(mesh: Mesh, batch: int, extra_dims: int = 1):
+    return NamedSharding(mesh, batch_spec(mesh, batch, extra_dims))
+
+
+def _ok(dim: int, mesh: Mesh, axis: str) -> bool:
+    return dim % mesh_size(mesh, axis) == 0
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", k)) for k in path)
+
+
+def _spec_for_param(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                    cfg: ArchConfig) -> P:
+    """Rule table.  ``shape`` includes the stacked [L] leading axis for
+    trunk params (path contains 'trunk')."""
+    parts = path.split("/")
+    is_bias = parts[-1] == "b"
+    if parts[-1] in ("w", "b"):   # dense_init nests {"w": ..., "b": ...}
+        name = parts[-2]
+        parent = parts[-3] if len(parts) > 2 else ""
+    else:
+        name = parts[-1]
+        parent = parts[-2] if len(parts) > 1 else ""
+    stacked = "trunk" in path
+    core = shape[1:] if stacked else shape
+    pre = (None,) if stacked else ()
+
+    def spec(*axes) -> P:
+        return P(*pre, *axes)
+
+    if is_bias:   # biases are tiny: replicate (XLA reshards as needed)
+        return spec(*([None] * len(core)))
+
+    ms = mesh_size(mesh, "model")
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+
+    # ---- embedding -------------------------------------------------------
+    if name == "table":
+        V, D = core
+        if V % ms == 0:
+            return spec("model", None)
+        if D % ms == 0:
+            return spec(None, "model")
+        return spec(None, None)
+
+    # ---- attention -------------------------------------------------------
+    if parent in ("attn", "cross"):
+        if name == "wq":
+            return spec(None, "model") if H % ms == 0 else spec(None, None)
+        if name in ("wk", "wv"):
+            return spec(None, "model") if KV % ms == 0 else spec(None, None)
+        if name == "wo":
+            return spec("model", None) if H % ms == 0 else spec(None, None)
+        if name == "b":  # qkv biases: tiny, replicate
+            return spec(*([None] * len(core)))
+
+    # ---- dense / moe FFN ---------------------------------------------------
+    if name in ("w_gate", "w_up"):
+        if len(core) == 3:  # MoE [E, D, F]
+            E, D, F = core
+            if E % ms == 0:
+                return spec("model", None, None)
+            if F % ms == 0:
+                return spec(None, None, "model")
+            return spec(None, None, None)
+        D, F = core
+        return spec(None, "model") if F % ms == 0 else spec(None, None)
+    if name == "w_down":
+        if len(core) == 3:  # MoE [E, F, D]
+            E, F, D = core
+            if E % ms == 0:
+                return spec("model", None, None)
+            if F % ms == 0:
+                return spec(None, "model", None)
+            return spec(None, None, None)
+        F, D = core
+        return spec("model", None) if F % ms == 0 else spec(None, None)
+    if name == "router":
+        return spec(None, None)
+
+    # ---- rwkv ----------------------------------------------------------------
+    if parent == "rwkv":
+        Hr = cfg.d_model // cfg.rwkv_head_dim
+        col_ok = Hr % ms == 0
+        if name in ("wr", "wk", "wv", "wg"):
+            return spec(None, "model") if col_ok else spec(None, None)
+        if name == "wo":
+            return spec("model", None) if col_ok else spec(None, None)
+        if name == "cm_k":
+            return spec(None, "model") if core[1] % ms == 0 else spec(None, None)
+        if name == "cm_v":
+            return spec("model", None) if core[0] % ms == 0 else spec(None, None)
+        if name == "cm_r":
+            return spec(None, "model") if core[1] % ms == 0 else spec(None, None)
+        if name in ("decay_A",):
+            return spec(None, None)
+        if name == "decay_B":
+            return spec(None, "model") if core[1] % ms == 0 else spec(None, None)
+        if name == "bonus_u":
+            return spec(*([None] * len(core)))
+
+    # ---- ssm (hybrid) ----------------------------------------------------------
+    if parent == "ssm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        if name == "in_proj":
+            return spec(None, "model") if (2 * d_in) % ms == 0 \
+                else spec(None, None)
+        if name == "out_proj":
+            return spec("model", None) if d_in % ms == 0 else spec(None, None)
+        if name in ("bc_proj", "dt_proj"):
+            # small N/H outputs; keep input dim sharded to match conv output
+            return spec(None, None)
+        if name in ("conv_w", "conv_b", "A_log", "D_skip"):
+            return spec(*([None] * len(core)))
+
+    # ---- norms / scalars: replicate -----------------------------------------
+    return spec(*([None] * len(core)))
+
+
+def param_shardings(param_shapes: Any, mesh: Mesh, cfg: ArchConfig,
+                    report: bool = False, fsdp: bool = False) -> Any:
+    """Tree of NamedShardings matching a (possibly abstract) param tree.
+
+    ``fsdp=True`` additionally shards the largest still-unsharded dim of
+    every >=2-d param over the batch axes (ZeRO-3 / FSDP): per-device
+    state shrinks by |data|x at the cost of per-layer weight all-gathers
+    (which overlap with compute on real hardware)."""
+    _REPORT.clear()
+    bat = batch_axes(mesh)
+
+    def f(path, leaf):
+        p = _path_str(path)
+        spec = _spec_for_param(p, tuple(leaf.shape), mesh, cfg)
+        # final validation: every named axis must divide
+        fixed = []
+        for dim, ax in zip(leaf.shape, spec + (None,) * len(leaf.shape)):
+            if ax is None:
+                fixed.append(None)
+            else:
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = int(np.prod([mesh_size(mesh, a) for a in axes]))
+                fixed.append(ax if dim % n == 0 else None)
+        if fsdp and len(leaf.shape) >= 2:
+            nbat = int(np.prod([mesh_size(mesh, a) for a in bat]))
+            # biggest unsharded dim that divides; skip tiny tensors
+            cands = sorted(
+                (i for i, (d, ax) in enumerate(zip(leaf.shape, fixed))
+                 if ax is None and d % nbat == 0 and d >= nbat),
+                key=lambda i: -leaf.shape[i])
+            if cands and int(np.prod(leaf.shape)) >= 1 << 16:
+                fixed[cands[0]] = bat
+        spec = P(*fixed)
+        if report:
+            _REPORT.append((p, tuple(leaf.shape), spec))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, param_shapes)
+
+
+def spec_report() -> List[Tuple[str, Tuple[int, ...], P]]:
+    return list(_REPORT)
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh, cfg: ArchConfig,
+                    batch: int) -> Any:
+    """Decode-cache shardings.
+
+    k/v [L,B,C,KV,hd]: B on (pod,)data when divisible, C (seq) on model —
+    and on the idle batch axes too when B doesn't shard (long_500k SP).
+    rwkv/ssm states: head dim on model, B on data when divisible.
+    """
+    ms = mesh_size(mesh, "model")
+    bax = batch_axes(mesh)
+    bn = int(np.prod([mesh_size(mesh, a) for a in bax]))
+    b_shardable = batch % bn == 0
+
+    def f(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        shp = leaf.shape
+        if name in ("k", "v"):          # [L, B, C, KV, hd]
+            C = shp[2]
+            seq_axes: Tuple[str, ...] = ()
+            if C % ms == 0:
+                seq_axes = ("model",)
+            if not b_shardable and C % (ms * bn) == 0:
+                seq_axes = (*bax, "model")
+            return NamedSharding(mesh, P(
+                None, bax if b_shardable else None,
+                seq_axes if seq_axes else None, None, None))
+        if name == "pos":               # [B, C]
+            C = shp[1]
+            seq_axes = ()
+            if C % ms == 0:
+                seq_axes = ("model",)
+            if not b_shardable and C % (ms * bn) == 0:
+                seq_axes = (*bax, "model")
+            return NamedSharding(mesh, P(
+                bax if b_shardable else None,
+                seq_axes if seq_axes else None))
+        if name == "wkv":               # [L, B, H, N, N]
+            Hn = shp[2]
+            return NamedSharding(mesh, P(
+                None, bax if b_shardable else None,
+                "model" if Hn % ms == 0 else None, None, None))
+        if name == "ssm":               # [L, B, H, P, N]
+            Hn = shp[2]
+            return NamedSharding(mesh, P(
+                None, bax if b_shardable else None,
+                "model" if Hn % ms == 0 else None, None, None))
+        if name in ("tmix_prev", "cmix_prev"):  # [L, B, 1, D]
+            return NamedSharding(mesh, P(
+                None, bax if b_shardable else None, None,
+                "model" if shp[3] % ms == 0 else None))
+        if name == "conv":              # [L, B, K-1, d_in]
+            return NamedSharding(mesh, P(
+                None, bax if b_shardable else None, None,
+                "model" if shp[3] % ms == 0 else None))
+        if name in ("cross_k", "cross_v"):  # [L, B, S_src, KV, hd]
+            S = shp[2]
+            return NamedSharding(mesh, P(
+                None, bax if b_shardable else None,
+                "model" if S % ms == 0 else None, None, None))
+        if name == "step":
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(*([None] * len(shp))))
+
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)

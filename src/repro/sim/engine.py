@@ -1,0 +1,115 @@
+"""Discrete-event engine: closed-loop QD simulation of the SSD pipeline.
+
+A fixed queue-depth worker pool (fio/libaio semantics, QD=64) keeps ``qd``
+IOs in flight.  Each IO serializes through up to two rate-limited stages:
+
+  index stage — only for external (non-onboard) lookups; throughput-limited
+      by the device's IndexEngine at the scheme's tier latency, and adds the
+      tier latency to the IO's completion time;
+  data stage  — throughput-limited by the device's baseline Table-3 numbers,
+      and adds the baseline per-IO latency.
+
+Event structure: because both stages are work-conserving single-queue rate
+limiters, the DES reduces to tracking each stage's next-free time while still
+processing every IO individually (so we get exact per-IO latencies and can
+mix hit/miss populations from the locality model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Optional
+
+import numpy as np
+
+from repro.sim.ssd import Scheme, SSDSpec
+from repro.sim.workload import Workload
+
+
+@dataclasses.dataclass
+class SimResult:
+    scheme: str
+    workload: str
+    device: str
+    n_ios: int
+    wall_s: float
+    iops: float
+    bandwidth_MBps: float
+    mean_lat_us: float
+    p99_lat_us: float
+    index_hit_ratio: float
+
+    def row(self) -> str:
+        return (f"{self.device},{self.workload},{self.scheme},"
+                f"{self.iops:.0f},{self.bandwidth_MBps:.1f},"
+                f"{self.mean_lat_us:.2f},{self.p99_lat_us:.2f}")
+
+
+def simulate(spec: SSDSpec, scheme: Scheme, workload: Workload,
+             seed: Optional[int] = None) -> SimResult:
+    rng = np.random.default_rng(workload.seed if seed is None else seed)
+    n = workload.n_ios
+    qd = workload.queue_depth
+    pattern, op = workload.pattern, workload.op
+
+    # ---- stage rates ------------------------------------------------------
+    data_rate = spec.base_iops(pattern, op)
+    # Table-3 latencies are QD1 figures; at QD=64 the device pipelines, so
+    # the steady-state per-IO latency is qd/rate (Little) — whichever is
+    # smaller binds.  Without this the Ideal scheme could never reach the
+    # device's own spec-sheet IOPS at the paper's queue depth.
+    data_lat = min(spec.base_latency_s(op), qd / data_rate)
+
+    engine = spec.index_rand if pattern in ("rand", "zipf") else spec.index_seq
+    needs_index = scheme.t_tier_s is not None and (
+        op == "read" or scheme.write_through_index)
+    if needs_index:
+        if scheme.name == "dftl":
+            # flash-resident index: single outstanding flash index op
+            index_rate = spec.dftl_concurrency / scheme.t_tier_s
+        else:
+            index_rate = engine.rate(scheme.t_tier_s)
+        index_lat = scheme.t_tier_s
+    else:
+        index_rate, index_lat = float("inf"), 0.0
+
+    hit_ratio = scheme.onboard_hit_ratio
+    hits = (rng.random(n) < hit_ratio) if needs_index and hit_ratio > 0 \
+        else np.zeros(n, dtype=bool) if needs_index else np.ones(n, dtype=bool)
+
+    # ---- closed-loop DES ---------------------------------------------------
+    # worker completion heap holds the times the qd slots free up
+    slots: List[float] = [0.0] * qd
+    heapq.heapify(slots)
+    index_free = 0.0
+    data_free = 0.0
+    lat = np.empty(n)
+    t_end = 0.0
+    inv_data = 1.0 / data_rate
+    inv_index = (1.0 / index_rate) if index_rate != float("inf") else 0.0
+
+    for i in range(n):
+        start = heapq.heappop(slots)
+        t = start
+        if needs_index and not hits[i]:
+            issue = max(t, index_free)
+            index_free = issue + inv_index
+            t = issue + index_lat
+        issue = max(t, data_free)
+        data_free = issue + inv_data
+        t = issue + data_lat
+        lat[i] = t - start
+        t_end = max(t_end, t)
+        heapq.heappush(slots, t)
+
+    wall = t_end
+    iops = n / wall
+    return SimResult(
+        scheme=scheme.name, workload=workload.name, device=spec.name,
+        n_ios=n, wall_s=wall, iops=iops,
+        bandwidth_MBps=iops * workload.io_bytes / 1e6,
+        mean_lat_us=float(lat.mean() * 1e6),
+        p99_lat_us=float(np.percentile(lat, 99) * 1e6),
+        index_hit_ratio=float(hits.mean()) if needs_index else 1.0,
+    )

@@ -1,0 +1,73 @@
+"""fio-like workload generation (paper §4: libaio, QD=64, 4 KB IOs).
+
+Generates deterministic, seeded IO streams over a device's LBA space.
+Patterns: ``randread / randwrite / seqread / seqwrite`` (the paper's four),
+plus ``zipfread`` for the §4.1.2 locality sweep (hot L2P entries hitting the
+onboard cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List
+
+import numpy as np
+
+IO_BYTES = 4096
+QUEUE_DEPTH = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class IO:
+    op: str          # "read" | "write"
+    lba: int         # in 4K pages
+    nbytes: int = IO_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    pattern: str     # "rand" | "seq" | "zipf"
+    op: str          # "read" | "write"
+    n_ios: int
+    queue_depth: int = QUEUE_DEPTH
+    io_bytes: int = IO_BYTES
+    zipf_alpha: float = 1.2
+    seed: int = 0
+
+    def generate(self, lba_space: int) -> np.ndarray:
+        """Return LBA array of length n_ios (deterministic)."""
+        rng = np.random.default_rng(self.seed)
+        if self.pattern == "seq":
+            start = int(rng.integers(0, max(lba_space - self.n_ios, 1)))
+            return (start + np.arange(self.n_ios)) % lba_space
+        if self.pattern == "rand":
+            return rng.integers(0, lba_space, self.n_ios)
+        if self.pattern == "zipf":
+            # bounded zipf over the LBA space
+            ranks = rng.zipf(self.zipf_alpha, self.n_ios)
+            return (ranks - 1) % lba_space
+        raise ValueError(f"unknown pattern {self.pattern}")
+
+    def ios(self, lba_space: int) -> Iterator[IO]:
+        for lba in self.generate(lba_space):
+            yield IO(self.op, int(lba), self.io_bytes)
+
+
+def make_workload(name: str, n_ios: int = 200_000, seed: int = 0,
+                  **kw) -> Workload:
+    """The paper's four workloads by name (+ zipfread)."""
+    table = {
+        "seqwrite": ("seq", "write"),
+        "randwrite": ("rand", "write"),
+        "seqread": ("seq", "read"),
+        "randread": ("rand", "read"),
+        "zipfread": ("zipf", "read"),
+    }
+    pattern, op = table[name]
+    return Workload(name=name, pattern=pattern, op=op, n_ios=n_ios,
+                    seed=seed, **kw)
+
+
+ALL_PAPER_WORKLOADS: List[str] = ["seqwrite", "randwrite", "seqread",
+                                  "randread"]

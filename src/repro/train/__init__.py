@@ -1,0 +1,6 @@
+from repro.train.loop import TrainState, make_train_step, train_state_init
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+
+__all__ = ["TrainState", "make_train_step", "train_state_init",
+           "latest_step", "restore_checkpoint", "save_checkpoint"]

@@ -1,0 +1,134 @@
+"""Checkpointing: sharded save/restore with atomic manifests.
+
+Fault-tolerance contract:
+  * a checkpoint is only visible once its manifest is atomically renamed
+    into place (no torn checkpoints after a crash);
+  * saves can run asynchronously (background thread snapshots host copies);
+  * restore works onto a DIFFERENT mesh/sharding (elastic re-mesh): arrays
+    are loaded host-side and ``device_put`` with the new shardings;
+  * the data pipeline is deterministic in (seed, step), so restore of
+    (params, opt_state, step) fully determines the continuation.
+
+Format: one .npz per pytree ("params", "opt_state") with flattened key
+paths + a JSON manifest carrying step/metadata.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+#: numpy can't serialize ml_dtypes (bfloat16 etc.); store a same-width
+#: integer view + the real dtype name in the manifest
+_EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+           "float8_e5m2": np.uint8}
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name in _EXOTIC:
+            flat[key] = arr.view(_EXOTIC[arr.dtype.name])
+            flat[f"__dtype__/{key}"] = np.asarray(arr.dtype.name)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _unflatten_like(template: Any, flat: Dict[str, np.ndarray]) -> Any:
+    paths_leaves = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        dt_key = f"__dtype__/{key}"
+        if dt_key in flat:
+            arr = arr.view(np.dtype(str(flat[dt_key])))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(paths_leaves[1], leaves)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, trees: Dict[str, Any],
+                    metadata: Optional[dict] = None,
+                    async_save: bool = False) -> threading.Thread | None:
+    """Write ``trees`` under ckpt_dir/step_<step>/ with atomic manifest."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    # snapshot to host memory NOW (so training can mutate devices after)
+    host = {name: _flatten(tree) for name, tree in trees.items()}
+
+    def _write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for name, flat in host.items():
+            np.savez(os.path.join(tmp, f"{name}.npz"), **flat)
+        manifest = {"step": step, "trees": sorted(host),
+                    "time": time.time(), **(metadata or {})}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic visibility
+
+    if async_save:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, templates: Dict[str, Any],
+                       step: Optional[int] = None,
+                       shardings: Optional[Dict[str, Any]] = None,
+                       ) -> Tuple[Dict[str, Any], int]:
+    """Restore trees (optionally re-sharded onto a new mesh)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    out = {}
+    for name, template in templates.items():
+        with np.load(os.path.join(d, f"{name}.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten_like(template, flat)
+        if shardings and name in shardings:
+            tree = jax.tree_util.tree_map(
+                lambda arr, sh: jax.device_put(arr, sh),
+                tree, shardings[name])
+        else:
+            tree = jax.tree_util.tree_map(jax.numpy.asarray, tree)
+        out[name] = tree
+    return out, step

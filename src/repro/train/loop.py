@@ -1,0 +1,101 @@
+"""Training step: grad accumulation, AdamW, optional LMB state offload
+and gradient compression.
+
+``make_train_step`` builds the pure function the dry-run lowers:
+
+    step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+Gradient accumulation runs microbatches under ``lax.scan`` (memory-bound
+shapes); the DP all-reduce happens implicitly via shardings.  With
+``flags.offload_opt_state`` (TPU), optimizer-state operands/results are
+annotated to ``pinned_host`` so XLA streams them HBM↔host around the update
+(the in-jit LMB data path); on CPU the host-stage path in
+``repro.train.offload_runner`` does the same movement eagerly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.zoo import Model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import ef_compress_tree, ef_state_init
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Dict[str, Any]
+    step: int = 0
+
+
+def train_state_init(model: Model, rng) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt_state=adamw_init(params))
+
+
+def _split_micro(batch: Dict[str, jax.Array], n: int) -> Dict[str, jax.Array]:
+    def f(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape(n, B // n, *x.shape[1:])
+    return {k: f(v) for k, v in batch.items()}
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    grad_accum: int = 1,
+                    compress_grads: bool = False) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, micro):
+        return model.loss(params, micro)
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micros = _split_micro(batch, grad_accum)
+
+            def body(acc, micro):
+                l, g = jax.value_and_grad(loss_fn)(params, micro)
+                acc_l, acc_g = acc
+                return (acc_l + l,
+                        jax.tree_util.tree_map(jnp.add, acc_g, g)), None
+
+            zero = (jnp.float32(0.0),
+                    jax.tree_util.tree_map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (loss, grads), _ = jax.lax.scan(body, zero, micros)
+            loss = loss / grad_accum
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+
+        if compress_grads:
+            grads, new_err = ef_compress_tree(grads, opt_state["ef_err"])
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, grads, {k: v for k, v in opt_state.items()
+                             if k != "ef_err"}, params)
+        if compress_grads:
+            new_opt["ef_err"] = new_err
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def opt_state_init(params, compress_grads: bool = False):
+    st = adamw_init(params)
+    if compress_grads:
+        st["ef_err"] = ef_state_init(params)
+    return st
+
+
+def abstract_train_state(model: Model, compress_grads: bool = False):
+    """ShapeDtypeStructs of (params, opt_state) without allocation."""
+    params = model.abstract_params()
+    opt = jax.eval_shape(lambda p: opt_state_init(p, compress_grads), params)
+    return params, opt

@@ -1,0 +1,16 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# the real (1-device) CPU backend; only launch/dryrun.py forces 512.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.key(0)

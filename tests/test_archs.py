@@ -1,0 +1,125 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+output shapes + no NaNs; decode == prefill consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, get_config, list_configs
+from repro.models import build_model
+from repro.models.flags import Flags
+
+ARCHS = list_configs()
+
+
+def tiny_batch(cfg, rng, B=2, S=32, with_labels=True):
+    tok = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tok}
+    if with_labels:
+        batch["labels"] = tok
+    if cfg.encoder_decoder:
+        batch["src_emb"] = jnp.full((B, S, cfg.d_model), 0.1,
+                                    jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch, rng):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = tiny_batch(cfg, rng)
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    assert np.isfinite(float(loss))
+    gnorms = [float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+              for g in jax.tree_util.tree_leaves(grads)]
+    assert all(np.isfinite(g) for g in gnorms)
+    assert any(g > 0 for g in gnorms)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode_shapes(arch, rng):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, S = 2, 32
+    batch = tiny_batch(cfg, rng, B, S, with_labels=False)
+    cache = model.init_cache(B, S)
+    logits, cache = jax.jit(model.prefill)(params, batch, cache)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache = jax.jit(model.decode_step)(params, cache, tok)
+    assert logits2.shape == (B, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+    assert int(cache["step"]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch, rng):
+    """prefill(S) + decode(1) == prefill(S+1) at the last position."""
+    cfg = get_config(arch).reduced()
+    if cfg.num_experts:   # lossless dispatch for the consistency check
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, S = 2, 17
+    batch = tiny_batch(cfg, rng, B, S, with_labels=False)
+    ref_logits, _ = jax.jit(model.prefill)(
+        params, batch, model.init_cache(B, S))
+    pre = {k: (v[:, :S - 1] if k == "tokens" else v)
+           for k, v in batch.items()}
+    _, cache = jax.jit(model.prefill)(params, pre, model.init_cache(B, S))
+    dec_logits, _ = jax.jit(model.decode_step)(
+        params, cache, batch["tokens"][:, S - 1:S])
+    np.testing.assert_allclose(np.asarray(ref_logits),
+                               np.asarray(dec_logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_all_cells(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    for cell in cfg.shape_cells():
+        specs = model.input_specs(cell)
+        assert specs
+        for v in specs.values():
+            assert all(d > 0 for d in v.shape)
+    # long_500k policy matches DESIGN.md §5
+    expect_long = cfg.supports_long_context()
+    assert ("long_500k" in cfg.shape_cells()) == expect_long
+
+
+def test_long_context_assignment_is_exactly_documented():
+    runs_long = {a for a in ARCHS
+                 if "long_500k" in get_config(a).shape_cells()}
+    assert runs_long == {"rwkv6-7b", "h2o-danube-3-4b", "mixtral-8x22b",
+                         "hymba-1.5b"}
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "rwkv6-7b", "hymba-1.5b"])
+def test_unroll_layers_bit_equal(arch, rng):
+    cfg = get_config(arch).reduced()
+    m0 = build_model(cfg, Flags(remat=False))
+    m1 = build_model(cfg, Flags(remat=False, unroll_layers=True,
+                                unroll_scans=True))
+    params = m0.init(rng)
+    batch = tiny_batch(cfg, rng)
+    l0 = jax.jit(m0.loss)(params, batch)
+    l1 = jax.jit(m1.loss)(params, batch)
+    assert float(l0) == pytest.approx(float(l1), abs=1e-6)
+
+
+def test_param_counts_sane():
+    """Analytic param counts within 20% of the nameplate sizes."""
+    expect = {"qwen2-1.5b": 1.5e9, "command-r-plus-104b": 104e9,
+              "granite-34b": 34e9, "dbrx-132b": 132e9,
+              "mixtral-8x22b": 141e9, "rwkv6-7b": 7e9,
+              "hymba-1.5b": 1.5e9, "chameleon-34b": 34e9}
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.75 * n <= got <= 1.35 * n, (arch, got / 1e9)

@@ -1,0 +1,54 @@
+"""Activation-constraint helper + metrics accounting."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.metrics import Metrics
+from repro.sharding.constraints import activation_mesh, constrain
+
+
+class TestConstraints:
+    def test_noop_without_mesh(self):
+        x = jnp.ones((4, 8, 16))
+        y = constrain(x, "residual")
+        assert y is x
+
+    def test_applies_inside_context(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        x = jnp.ones((4, 8, 16))
+        with activation_mesh(mesh):
+            y = constrain(x, "residual")
+            z = constrain(x, "ffn_hidden")
+        # on a 1x1 mesh the constraint is trivially satisfiable
+        assert y.shape == x.shape and z.shape == x.shape
+
+    def test_divisibility_degrades_not_crashes(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        with activation_mesh(mesh):
+            # odd dims that divide nothing still pass through
+            out = constrain(jnp.ones((3, 5, 7)), "residual")
+        assert out.shape == (3, 5, 7)
+
+    def test_decode_single_token_residual(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        with activation_mesh(mesh):
+            out = constrain(jnp.ones((2, 1, 16)), "residual")
+        assert out.shape == (2, 1, 16)
+
+
+class TestMetrics:
+    def test_hit_ratio_and_moves(self):
+        m = Metrics()
+        m.record_hit("kv", "onboard")
+        m.record_hit("kv", "onboard")
+        m.record_miss("kv", "onboard")
+        m.record_move("kv", "onboard", "lmb", 4096)
+        c = m.tier("kv", "onboard")
+        assert c.hit_ratio == pytest.approx(2 / 3)
+        assert c.bytes_out == 4096
+        assert m.tier("kv", "lmb").bytes_in == 4096
+        snap = m.snapshot()
+        assert snap["kv"]["onboard"]["hits"] == 2
+        m.reset()
+        assert m.tier("kv", "onboard").accesses == 0

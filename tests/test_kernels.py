@@ -1,0 +1,136 @@
+"""Pallas kernel validation: shape/dtype sweeps vs. ref.py oracles
+(interpret=True on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.models.rwkv6 import wkv_chunked
+from repro.models.ssm import ssd_chunked
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16] if dtype == jnp.bfloat16 else TOL[jnp.float32]
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (1, 192, 6, 1, 32),     # MQA, ragged S vs block
+    (2, 64, 4, 2, 128),     # single k block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 48),
+                                           (False, None)])
+def test_flash_attention_sweep(B, S, H, KV, hd, dtype, causal, window):
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=_tol(dtype), atol=_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,N,chunk", [
+    (1, 64, 2, 16, 16),
+    (2, 128, 4, 32, 32),
+    (1, 96, 1, 64, 32),     # uneven nc
+    (2, 64, 3, 16, 64),     # single chunk
+])
+@pytest.mark.parametrize("strong_decay", [False, True])
+def test_rwkv6_kernel_sweep(B, S, H, N, chunk, strong_decay):
+    if S % chunk:
+        pytest.skip("chunk must divide S")
+    ks = jax.random.split(jax.random.key(2), 5)
+    r = jax.random.normal(ks[0], (B, S, H, N))
+    k = jax.random.normal(ks[1], (B, S, H, N))
+    v = jax.random.normal(ks[2], (B, S, H, N))
+    if strong_decay:   # numerical stress: w down to ~0.01
+        w = jnp.exp(-jnp.exp(jax.random.uniform(ks[3], (B, S, H, N),
+                                                minval=-2.0, maxval=1.5)))
+    else:
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, N))) * \
+            0.3 + 0.69
+    u = jax.random.normal(ks[4], (H, N)) * 0.2
+    st = jax.random.normal(ks[4], (B, H, N, N)) * 0.1
+    out_ref, st_ref = ref.rwkv6_ref(r, k, v, w, u, st)
+    out_k, st_k = rwkv6_scan(r, k, v, w, u, st, chunk=chunk,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_ref),
+                               rtol=2e-4, atol=2e-4)
+    # the model's chunked XLA path must agree with both
+    out_c, st_c = wkv_chunked(r, k, v, w, u, st, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,H,KV,hd,P,T,MP", [
+    (2, 4, 2, 32, 8, 8, 4),
+    (3, 8, 8, 64, 16, 16, 3),   # MHA pages
+    (1, 6, 2, 32, 4, 4, 4),
+])
+def test_paged_attention_sweep(B, H, KV, hd, P, T, MP):
+    ks = jax.random.split(jax.random.key(3), 4)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (P, T, KV, hd))
+    vp = jax.random.normal(ks[2], (P, T, KV, hd))
+    rng = np.random.default_rng(0)
+    lengths = jnp.asarray(rng.integers(1, MP * T, B))
+    pt = np.full((B, MP), -1, np.int32)
+    perm = iter(rng.permutation(P))
+    for b in range(B):
+        for i in range(-(-int(lengths[b]) // T)):
+            pt[b, i] = next(perm)
+    pt = jnp.asarray(pt)
+    out = paged_attention(q, kp, vp, pt, lengths, interpret=True)
+    expect = ref.paged_attention_ref(q, kp, vp, pt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_ignores_unmapped_page_content():
+    """Garbage in unmapped pool pages must not leak into output
+    (IOMMU discipline: the clamped DMA reads page 0 but masks it)."""
+    B, H, KV, hd, P, T, MP = 1, 2, 2, 16, 4, 4, 3
+    ks = jax.random.split(jax.random.key(4), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (P, T, KV, hd))
+    vp = jax.random.normal(ks[2], (P, T, KV, hd))
+    pt = jnp.asarray([[2, -1, -1]], jnp.int32)
+    lengths = jnp.asarray([3])
+    out1 = paged_attention(q, kp, vp, pt, lengths, interpret=True)
+    kp2 = kp.at[0].set(999.0)   # poison page 0 (the clamp target)
+    vp2 = vp.at[0].set(999.0)
+    out2 = paged_attention(q, kp2, vp2, pt, lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 64, 2, 8, 8, 16), (1, 128, 4, 16, 16, 64)])
+def test_ssd_chunked_vs_ref(B, S, H, P, N, chunk):
+    ks = jax.random.split(jax.random.key(5), 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    st = jnp.zeros((B, H, P, N))
+    y_ref, s_ref = ref.ssd_ref(xh, dt, A, Bm, Cm, st)
+    y, s = ssd_chunked(xh, dt, A, Bm, Cm, st, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)

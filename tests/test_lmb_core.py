@@ -1,0 +1,125 @@
+"""Unit tests: expander / allocator / FM / access control / API."""
+
+import pytest
+
+from repro.core import (BLOCK_BYTES, AccessDenied, DeviceClass, DeviceInfo,
+                        Expander, FabricManager, InvalidHandle, LMBError,
+                        LMBHost, MediaKind, OutOfMemory, make_default_fabric)
+
+
+def make_host(pool_gib=1, page_bytes=4096, spare=False):
+    fm, exp = make_default_fabric(pool_gib=pool_gib, spare=spare)
+    fm.bind_host("h0")
+    fm.register_device(DeviceInfo("ssd0", DeviceClass.PCIE))
+    fm.register_device(DeviceInfo("gpu0", DeviceClass.PCIE))
+    fm.register_device(DeviceInfo("acc0", DeviceClass.CXL, spid=5))
+    return LMBHost(fm, "h0", page_bytes=page_bytes), fm, exp
+
+
+class TestExpander:
+    def test_block_grant_release(self):
+        exp = Expander([(MediaKind.DRAM, BLOCK_BYTES * 4)])
+        g1 = exp.grant_block("h0")
+        g2 = exp.grant_block("h0")
+        assert g1.block_id != g2.block_id
+        assert exp.free_bytes() == BLOCK_BYTES * 2
+        exp.release_block(g1.block_id)
+        assert exp.free_bytes() == BLOCK_BYTES * 3
+        with pytest.raises(InvalidHandle):
+            exp.release_block(g1.block_id)
+
+    def test_oom(self):
+        exp = Expander([(MediaKind.DRAM, BLOCK_BYTES)])
+        exp.grant_block("h0")
+        with pytest.raises(OutOfMemory):
+            exp.grant_block("h0")
+
+    def test_translate(self):
+        exp = Expander([(MediaKind.DRAM, BLOCK_BYTES * 2)])
+        g = exp.grant_block("h0")
+        dpa = exp.translate(g.block_id, 4096)
+        assert dpa == g.dpa_base + 4096
+        with pytest.raises(InvalidHandle):
+            exp.translate(g.block_id, BLOCK_BYTES)
+
+
+class TestAPI:
+    def test_alloc_free_roundtrip(self):
+        host, fm, _ = make_host()
+        a = host.lmb_pcie_alloc("ssd0", 1 << 20)
+        assert a.nbytes >= 1 << 20
+        assert host.owned_bytes("ssd0") == a.nbytes
+        host.lmb_pcie_free("ssd0", a.mmid)
+        assert host.owned_bytes("ssd0") == 0
+        # block returned to FM once empty
+        assert fm.held_bytes("h0") == 0
+
+    def test_wrong_owner_cannot_free(self):
+        host, _, _ = make_host()
+        a = host.lmb_pcie_alloc("ssd0", 4096)
+        with pytest.raises((AccessDenied, LMBError)):
+            host.lmb_pcie_free("gpu0", a.mmid)
+
+    def test_share_grants_access(self):
+        host, fm, _ = make_host()
+        a = host.lmb_pcie_alloc("ssd0", 8192)
+        with pytest.raises(AccessDenied):
+            host.check_access("gpu0", a.mmid)
+        s = host.lmb_pcie_share("ssd0", a.mmid, "gpu0")
+        assert s.hpa == a.hpa        # zero-copy: same physical region
+        host.check_access("gpu0", a.mmid)
+        # CXL share path sets SAT + returns the expander DPID
+        s2 = host.lmb_pcie_share("ssd0", a.mmid, "acc0")
+        assert s2.dpid is not None
+        host.check_access("acc0", a.mmid)
+
+    def test_sharer_free_drops_mapping_only(self):
+        host, _, _ = make_host()
+        a = host.lmb_pcie_alloc("ssd0", 4096)
+        host.lmb_pcie_share("ssd0", a.mmid, "gpu0")
+        host.lmb_pcie_free("gpu0", a.mmid)   # sharer drop
+        host.check_access("ssd0", a.mmid)    # owner still mapped
+        with pytest.raises(AccessDenied):
+            host.check_access("gpu0", a.mmid)
+
+    def test_quota(self):
+        host, fm, _ = make_host(pool_gib=1)
+        fm.set_quota("h0", BLOCK_BYTES)
+        host.lmb_pcie_alloc("ssd0", BLOCK_BYTES // 2)
+        with pytest.raises(OutOfMemory):
+            host.lmb_pcie_alloc("ssd0", BLOCK_BYTES)
+
+    def test_cxl_vs_pcie_class_enforced(self):
+        host, _, _ = make_host()
+        with pytest.raises(LMBError):
+            host.lmb_cxl_alloc("ssd0", 4096)
+        with pytest.raises(LMBError):
+            host.lmb_pcie_alloc("acc0", 4096)
+
+
+class TestFailover:
+    def test_failure_without_spare_blocks_new_allocs(self):
+        host, fm, exp = make_host()
+        host.lmb_pcie_alloc("ssd0", 4096)
+        fm.inject_failure()
+        assert not fm.healthy
+        with pytest.raises(LMBError):
+            host.lmb_pcie_alloc("ssd0", BLOCK_BYTES * 2)
+
+    def test_failover_with_spare_regrants(self):
+        host, fm, exp = make_host(spare=True)
+        host.lmb_pcie_alloc("ssd0", 4096)
+        held_before = fm.held_bytes("h0")
+        fm.inject_failure()
+        assert fm.healthy
+        assert fm.held_bytes("h0") == held_before
+        # journal records the regrant for reconstruction
+        ops = [e.op for e in fm.journal]
+        assert "fail" in ops and "regrant" in ops
+
+    def test_journal_tracks_lifecycle(self):
+        host, fm, _ = make_host()
+        a = host.lmb_pcie_alloc("ssd0", 4096)
+        host.lmb_pcie_free("ssd0", a.mmid)
+        ops = [e.op for e in fm.journal]
+        assert ops.count("grant") == 1 and ops.count("release") == 1

@@ -1,0 +1,181 @@
+"""Property-based tests (hypothesis) on the LMB invariants.
+
+Invariants under arbitrary alloc/free/share interleavings:
+  * no double allocation (regions never overlap within a block)
+  * owner accounting exact; free returns every byte
+  * blocks return to the FM exactly when empty
+  * LinkedBuffer: page table consistent, slots never alias, data survives
+    arbitrary eviction traffic (read-what-you-wrote)
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (DeviceClass, DeviceInfo, LMBHost, LinkedBuffer,
+                        OutOfMemory, make_default_fabric)
+from repro.core.metrics import Metrics
+from repro.core.policy import LRU, Clock, CostAwareLRU
+
+
+def fresh_host(page_bytes=4096):
+    fm, _ = make_default_fabric(pool_gib=1)
+    fm.bind_host("h0")
+    fm.register_device(DeviceInfo("dev0", DeviceClass.PCIE))
+    fm.register_device(DeviceInfo("dev1", DeviceClass.PCIE))
+    return LMBHost(fm, "h0", page_bytes=page_bytes, metrics=Metrics())
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "share"]),
+                          st.integers(0, 1),          # device
+                          st.integers(1, 96 * 1024)),  # size / index seed
+                min_size=1, max_size=40))
+def test_allocator_invariants(ops):
+    host = fresh_host()
+    live = {}      # mmid -> (owner, nbytes)
+    for op, dev, size in ops:
+        device = f"dev{dev}"
+        if op == "alloc":
+            a = host.lmb_pcie_alloc(device, size)
+            assert a.mmid not in live
+            live[a.mmid] = (device, a.nbytes)
+        elif op == "free" and live:
+            mmid = sorted(live)[size % len(live)]
+            owner, _ = live.pop(mmid)
+            host.lmb_pcie_free(owner, mmid)
+        elif op == "share" and live:
+            mmid = sorted(live)[size % len(live)]
+            owner, _ = live[mmid]
+            other = "dev1" if owner == "dev0" else "dev0"
+            s = host.lmb_pcie_share(owner, mmid, other)
+            assert s.mmid == mmid
+        # invariant: owned bytes match live set exactly
+        for d in ("dev0", "dev1"):
+            expect = sum(n for o, n in live.values() if o == d)
+            assert host.owned_bytes(d) == expect
+        # regions never overlap: per block, page sets disjoint
+        seen = {}
+        for r in host.allocator.iter_regions():
+            pages = set(range(r.page_start, r.page_start + r.npages))
+            prev = seen.setdefault(r.block_id, set())
+            assert not (prev & pages), "overlapping regions"
+            prev |= pages
+    # drain: everything freed -> all blocks returned
+    for mmid, (owner, _) in list(live.items()):
+        host.lmb_pcie_free(owner, mmid)
+    assert host.allocator.block_count == 0
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.data())
+def test_linked_buffer_read_what_you_wrote(data):
+    host = fresh_host(page_bytes=256)
+    n_onboard = data.draw(st.integers(2, 6))
+    policy = data.draw(st.sampled_from(["lru", "clock", "cost"]))
+    buf = LinkedBuffer(name="t", device_id="dev0", host=host,
+                       page_shape=(4, 4), dtype=jnp.float32,
+                       onboard_pages=n_onboard, policy=policy,
+                       lmb_chunk_pages=4, metrics=Metrics())
+    n_pages = data.draw(st.integers(1, 20))
+    pages = buf.append_pages(n_pages)
+    shadow = {}
+    ops = data.draw(st.lists(
+        st.tuples(st.sampled_from(["write", "read", "share_release"]),
+                  st.integers(0, n_pages - 1), st.integers(0, 1000)),
+        min_size=1, max_size=60))
+    for op, p, val in ops:
+        if op == "write":
+            arr = np.full((4, 4), float(val), np.float32)
+            buf.write(p, arr)
+            shadow[p] = float(val)
+        elif op == "read":
+            got = np.asarray(buf.read(p))
+            expect = shadow.get(p, 0.0)
+            assert np.all(got == expect), (p, expect, got[0, 0])
+        else:
+            buf.share(p)
+            buf.release(p)
+        buf.check_invariants()
+    for p, val in shadow.items():
+        assert float(np.asarray(buf.read(p))[0, 0]) == val
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["insert", "access", "remove"]),
+                          st.integers(0, 15)), min_size=1, max_size=80),
+       st.sampled_from([LRU, Clock, CostAwareLRU]))
+def test_eviction_policy_victim_validity(ops, policy_cls):
+    pol = policy_cls()
+    present = set()
+    for op, key in ops:
+        if op == "insert":
+            pol.on_insert(key)
+            present.add(key)
+        elif op == "access":
+            pol.on_access(key)
+        else:
+            if key in present:
+                pol.on_remove(key)
+                present.discard(key)
+        v = pol.victim()
+        if present:
+            assert v in present, f"{policy_cls.__name__} victim {v}"
+        else:
+            assert v is None
+
+
+def test_pinned_pages_never_evicted():
+    host = fresh_host(page_bytes=256)
+    buf = LinkedBuffer(name="p", device_id="dev0", host=host,
+                       page_shape=(2, 2), dtype=jnp.float32,
+                       onboard_pages=2, lmb_chunk_pages=4,
+                       metrics=Metrics())
+    pages = buf.append_pages(4)
+    buf.write(0, np.ones((2, 2), np.float32))
+    buf.pin(0)
+    for p in pages[1:]:
+        buf.write(p, np.ones((2, 2), np.float32) * p)
+    assert buf._pages[0].tier == "onboard"   # survived the traffic
+    buf.unpin(0)
+    buf.check_invariants()
+
+
+def test_onboard_exhaustion_all_pinned():
+    host = fresh_host(page_bytes=256)
+    buf = LinkedBuffer(name="x", device_id="dev0", host=host,
+                       page_shape=(2, 2), dtype=jnp.float32,
+                       onboard_pages=2, lmb_chunk_pages=4,
+                       metrics=Metrics())
+    pages = buf.append_pages(3)
+    buf.pin(pages[0])
+    buf.pin(pages[1])
+    with pytest.raises(OutOfMemory):
+        buf.pin(pages[2])
+
+
+def test_compressed_lmb_tier_roundtrip():
+    """int8 page compression on demotion: 4x fewer pool bytes, values
+    within quantization tolerance after a spill/fault round trip."""
+    import jax.numpy as jnp
+    host = fresh_host(page_bytes=256)
+    buf = LinkedBuffer(name="c", device_id="dev0", host=host,
+                       page_shape=(8, 8), dtype=jnp.float32,
+                       onboard_pages=2, lmb_chunk_pages=4,
+                       compress_lmb=True, metrics=Metrics())
+    pages = buf.append_pages(8)
+    rng = np.random.default_rng(0)
+    data = {p: rng.normal(size=(8, 8)).astype(np.float32) for p in pages}
+    for p in pages:
+        buf.write(p, data[p])          # forces spills of earlier pages
+    for p in pages:
+        got = np.asarray(buf.read(p))
+        err = np.abs(got - data[p]).max() / (np.abs(data[p]).max() + 1e-9)
+        assert err < 2e-2, (p, err)
+    buf.check_invariants()
+    # pool footprint: int8 pages -> 1/4 of the fp32 bytes
+    assert buf.lmb_page_bytes * 4 == buf.page_bytes
+    assert host.owned_bytes("dev0") <= 4 * 256  # one int8 chunk

@@ -1,0 +1,91 @@
+"""Simulator tests: Fig 6 reproduction bands (paper §4.1)."""
+
+import pytest
+
+from repro.sim import make_ssd_model, make_workload, simulate
+from repro.sim.ssd import Scheme, make_schemes
+from repro.core.tiers import LMB_CXL_ADDED_S
+
+N_IOS = 30_000
+
+
+def iops(gen, scheme_name, wl_name, hit=0.0):
+    spec = make_ssd_model(gen)
+    schemes = make_schemes(spec)
+    s = schemes[scheme_name]
+    if hit:
+        s = Scheme(s.name, s.t_tier_s, s.write_through_index,
+                   onboard_hit_ratio=hit)
+    return simulate(spec, s, make_workload(wl_name, n_ios=N_IOS)).iops
+
+
+@pytest.mark.parametrize("gen", [4, 5])
+@pytest.mark.parametrize("wl", ["seqwrite", "randwrite"])
+def test_writes_lmb_matches_ideal(gen, wl):
+    """Fig 6: LMB-CXL and LMB-PCIe match Ideal write throughput."""
+    ideal = iops(gen, "ideal", wl)
+    assert iops(gen, "lmb-cxl", wl) >= 0.98 * ideal
+    assert iops(gen, "lmb-pcie", wl) >= 0.98 * ideal
+
+
+@pytest.mark.parametrize("gen,factor", [(4, 5.0), (5, 10.0)])
+def test_writes_dftl_much_worse(gen, factor):
+    """Fig 6: Ideal ~7x (Gen4) / ~20x (Gen5) over DFTL on writes."""
+    assert iops(gen, "ideal", "randwrite") > \
+        factor * iops(gen, "dftl", "randwrite")
+
+
+def test_gen4_reads_cxl_near_ideal_pcie_mild_drop():
+    """Fig 6a: LMB-CXL ≈ Ideal; LMB-PCIe −13..17 %."""
+    for wl in ("seqread", "randread"):
+        ideal = iops(4, "ideal", wl)
+        assert iops(4, "lmb-cxl", wl) >= 0.95 * ideal
+        ratio = iops(4, "lmb-pcie", wl) / ideal
+        assert 0.80 <= ratio <= 0.92, ratio
+
+
+def test_gen5_read_degradation_bands():
+    """Fig 6b: −8 % (CXL seq), −56 % (CXL rand), −62/−70 % (PCIe)."""
+    table = {
+        ("lmb-cxl", "seqread"): (0.88, 0.97),
+        ("lmb-cxl", "randread"): (0.40, 0.50),
+        ("lmb-pcie", "seqread"): (0.33, 0.44),
+        ("lmb-pcie", "randread"): (0.26, 0.34),
+    }
+    for (scheme, wl), (lo, hi) in table.items():
+        ratio = iops(5, scheme, wl) / iops(5, "ideal", wl)
+        assert lo <= ratio <= hi, (scheme, wl, ratio)
+
+
+def test_reads_beat_dftl_by_order_of_magnitude():
+    for gen in (4, 5):
+        assert iops(gen, "lmb-pcie", "randread") > \
+            10 * iops(gen, "dftl", "randread")
+
+
+def test_locality_recovers_performance():
+    """§4.1.2: onboard hit ratio 'considerably dismisses' the CXL cost."""
+    base = iops(5, "lmb-pcie", "randread", hit=0.0)
+    warm = iops(5, "lmb-pcie", "randread", hit=0.9)
+    ideal = iops(5, "ideal", "randread")
+    assert warm > base * 1.8
+    assert warm >= 0.75 * ideal
+
+
+def test_latency_ordering():
+    """Per-IO latency must order ideal <= cxl <= pcie <= dftl."""
+    spec = make_ssd_model(5)
+    schemes = make_schemes(spec)
+    wl = make_workload("randread", n_ios=N_IOS)
+    lat = {n: simulate(spec, schemes[n], wl).mean_lat_us
+           for n in ("ideal", "lmb-cxl", "lmb-pcie", "dftl")}
+    assert lat["ideal"] <= lat["lmb-cxl"] <= lat["lmb-pcie"] <= lat["dftl"]
+
+
+def test_deterministic():
+    spec = make_ssd_model(4)
+    schemes = make_schemes(spec)
+    wl = make_workload("randread", n_ios=5000, seed=7)
+    a = simulate(spec, schemes["lmb-cxl"], wl)
+    b = simulate(spec, schemes["lmb-cxl"], wl)
+    assert a.iops == b.iops and a.p99_lat_us == b.p99_lat_us

@@ -1,0 +1,141 @@
+"""Training integration: loss decreases, checkpoint/restart, failure
+recovery, elastic re-shard, grad compression, optimizer-state offload."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.train import run as train_run
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import ef_compress_tree, ef_state_init
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.fault import StragglerDetector
+
+
+def test_loss_decreases():
+    out = train_run("qwen2-1.5b", steps=30, global_batch=4, seq_len=64,
+                    verbose=False)
+    assert out["final_loss"] < out["first_loss"] - 0.1
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([4.0, -3.0])}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                      total_steps=200)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(cfg, g, state, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 7, {"params": tree})
+    assert latest_step(str(tmp_path)) == 7
+    out, step = restore_checkpoint(str(tmp_path), {"params": tree})
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(out["params"]["a"]),
+                                  np.asarray(tree["a"]))
+    assert out["params"]["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A .tmp dir (torn write) must be invisible to latest_step."""
+    tree = {"a": jnp.zeros((2,))}
+    save_checkpoint(str(tmp_path), 1, {"params": tree})
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_async_checkpoint(tmp_path):
+    tree = {"a": jnp.ones((128, 128))}
+    t = save_checkpoint(str(tmp_path), 3, {"params": tree},
+                        async_save=True)
+    t.join()
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_restart_after_failure_resumes_and_matches(tmp_path):
+    """Crash at step 12, restart from ckpt 10: final params must equal an
+    uninterrupted run (deterministic data + checkpointed state)."""
+    kw = dict(steps=20, global_batch=4, seq_len=32, ckpt_every=10,
+              verbose=False)
+    ref = train_run("qwen2-1.5b", **kw)
+
+    ckpt = str(tmp_path / "ck")
+    with pytest.raises(RuntimeError):
+        train_run("qwen2-1.5b", ckpt_dir=ckpt, fail_at={12}, **kw)
+    assert latest_step(ckpt) == 10
+    out = train_run("qwen2-1.5b", ckpt_dir=ckpt, **kw)  # resumes at 10
+    for a, b in zip(jax.tree_util.tree_leaves(ref["params"]),
+                    jax.tree_util.tree_leaves(out["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_elastic_restore_onto_new_sharding(tmp_path):
+    """Checkpoint restores onto a different device layout (elastic
+    re-mesh): values identical regardless of sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save_checkpoint(str(tmp_path), 5, {"params": tree})
+    sh = {"params": {"w": NamedSharding(mesh, P("data", None))}}
+    out, _ = restore_checkpoint(str(tmp_path), {"params": tree},
+                                shardings=sh)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(tree["w"]))
+    assert out["params"]["w"].sharding == sh["params"]["w"]
+
+
+def test_grad_compression_error_feedback():
+    """int8 EF compression: biased once, unbiased over repetition."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(
+        size=(256,)).astype(np.float32))}
+    err = ef_state_init(g)
+    total = jnp.zeros_like(g["w"])
+    for _ in range(50):
+        d, err = ef_compress_tree(g, err)
+        total = total + d["w"]
+    mean = total / 50
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(g["w"]),
+                               atol=2e-2)
+
+
+def test_training_with_compression_still_learns():
+    out = train_run("qwen2-1.5b", steps=30, global_batch=4, seq_len=64,
+                    compress_grads=True, verbose=False)
+    assert out["final_loss"] < out["first_loss"] - 0.1
+
+
+def test_offloaded_opt_state_matches_onboard():
+    a = train_run("qwen2-1.5b", steps=10, global_batch=4, seq_len=32,
+                  verbose=False)
+    b = train_run("qwen2-1.5b", steps=10, global_batch=4, seq_len=32,
+                  offload_opt=True, verbose=False)
+    assert a["final_loss"] == pytest.approx(b["final_loss"], abs=1e-5)
+
+
+def test_straggler_detector_flags_outlier():
+    det = StragglerDetector(window=32)
+    flagged = [det.observe(0.1) for _ in range(20)]
+    assert not any(flagged)
+    assert det.observe(1.0)
+    assert not det.observe(0.1)
+
+
+def test_grad_accum_equivalent():
+    """grad_accum=2 over the same tokens == one big batch (linear loss)."""
+    a = train_run("qwen2-1.5b", steps=5, global_batch=8, seq_len=32,
+                  grad_accum=1, verbose=False)
+    b = train_run("qwen2-1.5b", steps=5, global_batch=8, seq_len=32,
+                  grad_accum=2, verbose=False)
+    assert a["final_loss"] == pytest.approx(b["final_loss"], abs=5e-3)
