@@ -51,6 +51,42 @@ def bench_fig6() -> None:
                      f"p99us={r.p99_lat_us:.1f}")
 
 
+# --------------------------------------- shared-fabric sweep (repro.qos)
+def bench_fabric_sweep() -> None:
+    """1->16 devices on ONE expander: aggregate throughput saturates at
+    link bandwidth, equal-weight devices split it fairly, and a 2:1-weight
+    tenant gets ~2x an unweighted one (weighted max-min arbitration)."""
+    from repro.sim import (make_ssd_model, make_workload,
+                           simulate_shared_fabric)
+    from repro.sim.ssd import make_schemes
+    spec = make_ssd_model(5)
+    scheme = make_schemes(spec)["lmb-cxl"]
+    wl = make_workload("randread", n_ios=20_000)
+    link = 30e9
+    for n in (1, 2, 4, 8, 12, 16):
+        t0 = time.perf_counter()
+        r = simulate_shared_fabric(spec, scheme, wl, n,
+                                   link_bandwidth_Bps=link)
+        wall = (time.perf_counter() - t0) * 1e6
+        goodputs = [d.iops * wl.io_bytes for d in r.per_device]
+        spread = (max(goodputs) - min(goodputs)) / max(goodputs)
+        _row(f"fabric_sweep.equal.n{n:02d}", wall,
+             f"aggGBps={r.aggregate_goodput_Bps/1e9:.2f};"
+             f"rho={r.offered_utilization:.2f};"
+             f"jain={r.fairness_jain:.3f};spread={spread:.3f};"
+             f"p99us={r.mean_p99_us:.1f}")
+    # weighted tenants: dev0 weighs 2x, everyone saturated -> 2x goodput
+    n = 16
+    r = simulate_shared_fabric(spec, scheme, wl, n,
+                               link_bandwidth_Bps=link,
+                               weights=[2.0] + [1.0] * (n - 1))
+    goodputs = [d.iops * wl.io_bytes for d in r.per_device]
+    _row(f"fabric_sweep.weighted2x.n{n:02d}", 0.0,
+         f"aggGBps={r.aggregate_goodput_Bps/1e9:.2f};"
+         f"ratio={goodputs[0]/goodputs[1]:.2f};"
+         f"p99us={r.mean_p99_us:.1f}")
+
+
 # --------------------------------------------------- §4.1.2 locality sweep
 def bench_locality_sweep() -> None:
     """Hot-index hit ratio -> throughput recovery (paper §4.1.2 claim)."""
@@ -186,6 +222,7 @@ def bench_serving() -> None:
 BENCHES = {
     "fig2": bench_fig2_latency,
     "fig6": bench_fig6,
+    "fabric_sweep": bench_fabric_sweep,
     "locality": bench_locality_sweep,
     "allocator": bench_allocator,
     "offload": bench_offload_overlap,

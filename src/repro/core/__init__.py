@@ -17,12 +17,13 @@ from repro.core.fabric import (AccessDenied, DeviceClass, DeviceInfo,
 from repro.core.offload import TierExecutor, supports_in_jit_offload
 from repro.core.pool import (BLOCK_BYTES, BlockAllocator, Expander,
                              InvalidHandle, LMBError, MediaKind, OutOfMemory)
-from repro.core.tiers import TierKind, TierSpec, paper_tiers, tpu_tiers
+from repro.core.tiers import (TierKind, TierSpec, congested_latency,
+                              paper_tiers, tpu_tiers)
 
 __all__ = [
     "Allocation", "LMBHost", "LinkedBuffer", "AccessDenied", "DeviceClass",
     "DeviceInfo", "FabricManager", "make_default_fabric", "TierExecutor",
     "supports_in_jit_offload", "BLOCK_BYTES", "BlockAllocator", "Expander",
     "InvalidHandle", "LMBError", "MediaKind", "OutOfMemory", "TierKind",
-    "TierSpec", "paper_tiers", "tpu_tiers",
+    "TierSpec", "congested_latency", "paper_tiers", "tpu_tiers",
 ]

@@ -170,5 +170,12 @@ class LMBHost:
         self.fm.check_access(device_id, region.block_id,
                              region.page_start + page)
 
+    def meter_transfer(self, device_id: str, nbytes: int) -> float:
+        """Charge an expander-link transfer to this device's QoS share;
+        returns the modeled delay (queue + wire) in seconds.  Every byte a
+        consumer moves to/from the LMB tier should pass through here so the
+        FM's arbiter sees true link occupancy."""
+        return self.fm.meter_transfer(device_id, nbytes).delay_s
+
     def owned_bytes(self, device_id: str) -> int:
         return self.allocator.owned_bytes(device_id)

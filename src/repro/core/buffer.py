@@ -86,6 +86,15 @@ class LinkedBuffer:
         self.prefetcher = Prefetcher(prefetch_depth) if prefetch_depth else None
         self.degraded = False
         host.fm.on_failover(self._on_failover)
+        # QoS link metering: every byte crossing to/from the LMB tier is
+        # charged to this device's share of the expander link.  If the
+        # caller's executor carries a meter hook AND actually fires it
+        # (only on real host tiers — in pure modeling mode the executor
+        # can't tell LMB pools from device arrays), defer to it to avoid
+        # double-charging the same page move.
+        self._meter_via_executor = (self.executor.meter is not None
+                                    and self.executor.real_host_tier)
+        self.link_wait_s = 0.0
 
         # pools
         self._onboard_pool = self.executor.alloc_pool(
@@ -139,10 +148,16 @@ class LinkedBuffer:
             self._grow_lmb()
         return self._lmb_free.pop()
 
+    def _meter_link(self) -> None:
+        if not self._meter_via_executor:
+            self.link_wait_s += self.host.meter_transfer(
+                self.device_id, self.lmb_page_bytes)
+
     def _lmb_read(self, slot: int) -> jax.Array:
         chunk, off = divmod(slot, self._lmb_chunk_pages)
         # access-control check on the data path (IOMMU/SAT)
         self.host.check_access(self.device_id, self._lmb_allocs[chunk].mmid)
+        self._meter_link()
         page = self.executor.read_page(self._lmb_pools[chunk], off)
         if self.compress_lmb:
             scale = self._lmb_scales.pop(slot, 0.0)
@@ -152,6 +167,7 @@ class LinkedBuffer:
     def _lmb_write(self, slot: int, data: jax.Array) -> None:
         chunk, off = divmod(slot, self._lmb_chunk_pages)
         self.host.check_access(self.device_id, self._lmb_allocs[chunk].mmid)
+        self._meter_link()
         if self.compress_lmb:
             f = data.astype(jnp.float32)
             amax = float(jnp.max(jnp.abs(f))) + 1e-12
@@ -379,4 +395,6 @@ class LinkedBuffer:
             "hit_ratio": c.hit_ratio,
             "lmb_bytes_held": self.host.owned_bytes(self.device_id),
             "degraded": self.degraded,
+            "link_wait_s": self.link_wait_s,
+            "link_utilization": self.host.fm.link_utilization(),
         }

@@ -25,6 +25,10 @@ from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core.pool import (BLOCK_BYTES, BlockGrant, Expander, InvalidHandle,
                              LMBError, MediaKind, OutOfMemory)
+from repro.qos.arbiter import LinkArbiter, TransferGrant
+
+#: default per-expander link bandwidth (matches the LMB_CXL tier's 30 GB/s)
+DEFAULT_LINK_BW_Bps = 30e9
 
 
 class DeviceClass(enum.Enum):
@@ -38,6 +42,10 @@ class DeviceInfo:
     device_class: DeviceClass
     #: Source PBR ID for CXL devices (paper Table 1); None for PCIe devices
     spid: Optional[int] = None
+    #: weighted-fair share of the expander link (repro.qos.arbiter)
+    bw_weight: float = 1.0
+    #: token-bucket burst allowance on the link; 0 = no burst credit
+    bw_burst_bytes: int = 0
 
 
 class AccessDenied(LMBError):
@@ -111,7 +119,8 @@ class FabricManager:
     """FM: binds hosts/devices to expander capacity; single control point."""
 
     def __init__(self, expander: Expander,
-                 spare: Optional[Expander] = None):
+                 spare: Optional[Expander] = None,
+                 link_bandwidth_Bps: float = DEFAULT_LINK_BW_Bps):
         self._lock = threading.RLock()
         self._expander = expander
         self._spare = spare
@@ -122,6 +131,10 @@ class FabricManager:
         self.iommu = IOMMUTable()
         self.journal: List[JournalEntry] = []
         self._failover_listeners: List[Callable[[], None]] = []
+        #: link-bandwidth arbiter — the bandwidth analogue of the capacity
+        #: quotas above; devices are its tenants (registered on
+        #: register_device, re-weighted through set_bw_share)
+        self.arbiter = LinkArbiter(link_bandwidth_Bps)
 
     # -- binding -------------------------------------------------------------
     def bind_host(self, host_id: str, quota_bytes: Optional[int] = None) -> None:
@@ -146,6 +159,8 @@ class FabricManager:
             if info.device_class is DeviceClass.CXL and info.spid is None:
                 raise ValueError("CXL device needs an SPID")
             self._devices[info.device_id] = info
+            self.arbiter.register(info.device_id, weight=info.bw_weight,
+                                  burst_bytes=info.bw_burst_bytes)
 
     def device(self, device_id: str) -> DeviceInfo:
         info = self._devices.get(device_id)
@@ -185,6 +200,35 @@ class FabricManager:
     def held_bytes(self, host_id: str) -> int:
         with self._lock:
             return len(self._granted.get(host_id, [])) * BLOCK_BYTES
+
+    # -- bandwidth quotas (the DCD analogue for the shared link) --------------
+    def set_bw_share(self, device_id: str, weight: float,
+                     burst_bytes: Optional[int] = None) -> None:
+        """Grant/revoke link-bandwidth share at runtime, like set_quota does
+        for capacity.  Weight is relative (weighted-fair), so 'revoking'
+        is lowering a weight — the link itself is never left idle."""
+        with self._lock:
+            info = self.device(device_id)
+            self._devices[device_id] = dataclasses.replace(
+                info, bw_weight=weight,
+                bw_burst_bytes=(info.bw_burst_bytes if burst_bytes is None
+                                else burst_bytes))
+            self.arbiter.register(
+                device_id, weight=weight,
+                burst_bytes=self._devices[device_id].bw_burst_bytes)
+            self.journal.append(
+                JournalEntry("bw_share", device_id, detail=str(weight)))
+
+    def meter_transfer(self, device_id: str, nbytes: int) -> TransferGrant:
+        """Charge a data-path transfer against the device's link share.
+
+        Hot path (every LinkedBuffer demote/fault): deliberately not
+        journaled — aggregate occupancy lives in the arbiter snapshot."""
+        self.device(device_id)  # InvalidHandle on unknown devices
+        return self.arbiter.meter(device_id, nbytes)
+
+    def link_utilization(self) -> float:
+        return self.arbiter.utilization()
 
     # -- access control -------------------------------------------------------
     def authorize(self, device_id: str, block_id: int, page_start: int,
@@ -260,12 +304,16 @@ class FabricManager:
                 "free_bytes": self._active().free_bytes(),
                 "journal_len": len(self.journal),
                 "healthy": self.healthy,
+                "link": self.arbiter.snapshot(),
             }
 
 
 def make_default_fabric(pool_gib: int = 64,
-                        spare: bool = False) -> Tuple[FabricManager, Expander]:
+                        spare: bool = False,
+                        link_bandwidth_Bps: float = DEFAULT_LINK_BW_Bps,
+                        ) -> Tuple[FabricManager, Expander]:
     """One DRAM expander of ``pool_gib`` (+ optional spare), one FM."""
     exp = Expander([(MediaKind.DRAM, pool_gib * 2**30)])
     sp = Expander([(MediaKind.DRAM, pool_gib * 2**30)]) if spare else None
-    return FabricManager(exp, spare=sp), exp
+    return FabricManager(exp, spare=sp,
+                         link_bandwidth_Bps=link_bandwidth_Bps), exp

@@ -25,7 +25,7 @@ Two execution modes, auto-detected:
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -131,12 +131,28 @@ class TierExecutor:
     modeling mode — still exercises every allocator/policy path).
     """
 
-    def __init__(self, lmb_memory_kind: Optional[str] = None):
+    def __init__(self, lmb_memory_kind: Optional[str] = None,
+                 meter: Optional[Callable[[int], float]] = None):
         kinds = backend_memory_kinds()
         if lmb_memory_kind is None:
             lmb_memory_kind = PINNED_HOST if PINNED_HOST in kinds else DEVICE
         self.lmb_memory_kind = lmb_memory_kind
         self.real_host_tier = lmb_memory_kind != DEVICE
+        #: QoS hook: charged with nbytes for every page crossing the
+        #: host<->device boundary (the expander-link analogue on a TPU
+        #: host); typically LMBHost.meter_transfer bound to a device id.
+        #: In pure modeling mode (no host memories) executor-level moves
+        #: are indistinguishable from device ops, so consumers that still
+        #: want link accounting meter at their own layer (LinkedBuffer).
+        self.meter = meter
+
+    def _meter(self, pool: jax.Array, nbytes: int) -> None:
+        if self.meter is not None and tier_of(pool) != DEVICE:
+            self.meter(nbytes)
+
+    @staticmethod
+    def _page_bytes(pool: jax.Array) -> int:
+        return int(np.prod(pool.shape[1:])) * jnp.dtype(pool.dtype).itemsize
 
     def alloc_pool(self, npages: int, page_shape: tuple, dtype,
                    tier: str) -> jax.Array:
@@ -147,12 +163,14 @@ class TierExecutor:
         return x
 
     def read_page(self, pool: jax.Array, slot: int) -> jax.Array:
+        self._meter(pool, self._page_bytes(pool))
         page = pool[slot]
         return put_tier(page, DEVICE)
 
     def write_page(self, pool: jax.Array, slot: int,
                    page: jax.Array) -> jax.Array:
         tier = tier_of(pool)
+        self._meter(pool, self._page_bytes(pool))
         page = put_tier(page, tier)
         new = pool.at[slot].set(page)
         return put_tier(new, tier)  # .at[].set may drop the memory kind

@@ -42,9 +42,44 @@ class TierSpec:
     #: capacity available in this tier (None = unbounded for modeling)
     capacity_bytes: int | None = None
 
-    def access_time(self, nbytes: int) -> float:
-        """Latency + transfer time for an ``nbytes`` access."""
-        return self.added_latency_s + nbytes / self.bandwidth_Bps
+    def access_time(self, nbytes: int, utilization: float = 0.0) -> float:
+        """Latency + transfer time for an ``nbytes`` access.
+
+        ``utilization`` is the load on the shared link behind this tier
+        (0 = uncontended, the seed behaviour).  The fixed
+        ``added_latency_s`` inflates with queueing delay per
+        :func:`congested_latency`; the transfer term stays nominal because
+        bandwidth *shares* are the arbiter's job (repro.qos.arbiter), not
+        the per-access cost model's.
+        """
+        return (congested_latency(self.added_latency_s, utilization)
+                + nbytes / self.bandwidth_Bps)
+
+
+# ---------------------------------------------------------------------------
+# Shared-link congestion (repro.qos)
+# ---------------------------------------------------------------------------
+
+#: utilization is clamped here so the M/M/1-style queueing term stays finite
+#: even when demand exceeds link capacity (rho >= 1 in the open model)
+CONGESTION_RHO_MAX = 0.97
+#: how strongly queueing delay scales with utilization; 1.0 = M/M/1 waiting
+#: time (W = rho/(1-rho) service times) — CXL fabric measurements (Samsung
+#: CMM-H characterization; Zhong et al. pooling study) sit near this shape
+CONGESTION_SENSITIVITY = 1.0
+
+
+def congested_latency(base_latency_s: float, utilization: float,
+                      sensitivity: float = CONGESTION_SENSITIVITY) -> float:
+    """Effective access latency on a shared link at ``utilization``.
+
+    Monotone non-decreasing in ``utilization`` and equal to
+    ``base_latency_s`` at zero load — the seed's fixed-latency model is the
+    uncontended special case.  Used by the Fig-6 multi-device simulator and
+    the serving admission controller (repro.qos.slo).
+    """
+    rho = min(max(utilization, 0.0), CONGESTION_RHO_MAX)
+    return base_latency_s * (1.0 + sensitivity * rho / (1.0 - rho))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,33 @@
+"""repro.qos — shared-fabric contention and multi-tenant QoS.
+
+The paper's scalability story (one expander behind many PCIe devices)
+makes the CXL link a contended, arbitrated resource.  Three layers:
+
+  arbiter    — weighted-fair / token-bucket scheduling of per-tenant
+               transfer demand onto per-expander link bandwidth
+  contention — effective tier latency as a function of link utilization
+               (replaces the fixed added_latency_s on hot paths)
+  slo        — per-tenant SLO tracking + admit/throttle/shed control
+
+Wired through: FabricManager owns a LinkArbiter next to its capacity
+quotas, LinkedBuffer meters paging traffic through it, the Fig-6
+simulator grows a multi-device shared-fabric mode, and the serving
+engine routes admission through the SLO controller.
+"""
+
+# arbiter must come first: it is core-free, and importing contention/slo
+# below pulls in repro.core, whose fabric module imports repro.qos.arbiter
+from repro.qos.arbiter import (LinkArbiter, TenantState, TransferGrant,
+                               UnknownTenant, jain_fairness,
+                               weighted_max_min)
+from repro.qos.contention import (ContendedTierSpec, LinkState,
+                                  contended_tiers)
+from repro.qos.slo import (AdmissionController, Decision, SLOTarget,
+                           TenantSLO)
+
+__all__ = [
+    "LinkArbiter", "TenantState", "TransferGrant", "UnknownTenant",
+    "jain_fairness", "weighted_max_min", "ContendedTierSpec", "LinkState",
+    "contended_tiers", "AdmissionController", "Decision", "SLOTarget",
+    "TenantSLO",
+]

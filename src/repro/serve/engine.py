@@ -10,6 +10,12 @@ Flow per request: admit -> prefill (bucketed padding) -> decode in a slot
 -> [optional preempt: KV pages out to LMB; resume: pages back] -> finish.
 Swap decisions consult the tier cost model; all movement is metered by
 repro.core.metrics.
+
+Multi-tenant QoS (repro.qos): requests carry a tenant id; when the engine
+is built with an AdmissionController, every seating decision routes
+through it — ADMIT seats the request, THROTTLE leaves it queued for a
+later round, SHED rejects it outright (state "shed").  Completed request
+latencies feed the tenant's SLO tracker, closing the loop.
 """
 
 from __future__ import annotations
@@ -26,6 +32,7 @@ import numpy as np
 from repro.core.api import LMBHost
 from repro.core.tiers import TierKind, tpu_tiers
 from repro.models.zoo import Model
+from repro.qos.slo import AdmissionController, Decision
 from repro.serve.kv_cache import PagedKVStore
 
 
@@ -34,9 +41,10 @@ class Request:
     req_id: int
     prompt: np.ndarray                 # [S] int32
     max_new_tokens: int = 16
+    tenant: str = "default"
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     seq_id: Optional[int] = None
-    state: str = "waiting"             # waiting|active|preempted|done
+    state: str = "waiting"             # waiting|active|preempted|done|shed
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
@@ -53,11 +61,15 @@ class EngineConfig:
 
 class ServeEngine:
     def __init__(self, model: Model, params, host: LMBHost,
-                 ecfg: EngineConfig, device_id: str = "tpu0"):
+                 ecfg: EngineConfig, device_id: str = "tpu0",
+                 qos: Optional[AdmissionController] = None):
         self.model = model
         self.params = params
         self.ecfg = ecfg
         self.cfg = model.cfg
+        self.qos = qos
+        self.shed: List[int] = []
+        self._tenant_live: Dict[str, int] = {}   # in-flight reqs per tenant
         self.kv = PagedKVStore(
             cfg=model.cfg, host=host, device_id=device_id,
             page_tokens=ecfg.page_tokens, onboard_pages=ecfg.onboard_pages)
@@ -71,13 +83,15 @@ class ServeEngine:
         self._decode_fn = jax.jit(model.decode_step)
 
     # -------------------------------------------------------------- intake
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               tenant: str = "default") -> int:
         rid = self._next_req
         self._next_req += 1
         req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens,
-                      submitted_at=time.monotonic())
+                      tenant=tenant, submitted_at=time.monotonic())
         self.requests[rid] = req
         self.waiting.append(req)
+        self._tenant_live[tenant] = self._tenant_live.get(tenant, 0) + 1
         return rid
 
     # ----------------------------------------------------------- prefill
@@ -114,9 +128,29 @@ class ServeEngine:
         return jnp.stack([k, v], axis=1)          # [L, 2, len, KV, hd]
 
     # ------------------------------------------------------------- decode
+    def _qos_gate(self, req: Request) -> Decision:
+        """SLO admission for one fresh request; resumes bypass the gate
+        (a preempted request was already admitted — re-seating it is a
+        swap-in, not new load on the link)."""
+        if self.qos is None or req.state == "preempted":
+            return Decision.ADMIT
+        return self.qos.decide(req.tenant)
+
     def _admit(self) -> None:
-        while self.waiting and self._slot_free:
+        considered = 0
+        limit = len(self.waiting)   # each waiter gets one decision per round
+        while self.waiting and self._slot_free and considered < limit:
+            considered += 1
             req = self.waiting.popleft()
+            decision = self._qos_gate(req)
+            if decision is Decision.SHED:
+                req.state = "shed"
+                self.shed.append(req.req_id)
+                self._tenant_live[req.tenant] -= 1
+                continue
+            if decision is Decision.THROTTLE:
+                self.waiting.append(req)       # retry a later round
+                continue
             if req.state == "preempted":
                 self.kv.schedule_swap_in(req.seq_id)   # LMB -> onboard
             else:
@@ -161,7 +195,18 @@ class ServeEngine:
                 del self.active[slot]
                 self._slot_free.append(slot)
                 finished += 1
+                self._qos_finish(req)
         return finished
+
+    def _qos_finish(self, req: Request) -> None:
+        """Feed the completed request's latency to its tenant's SLO
+        tracker; drop the tenant's demand off the link once it drains."""
+        self._tenant_live[req.tenant] -= 1
+        if self.qos is None:
+            return
+        self.qos.observe(req.tenant, req.done_at - req.submitted_at)
+        if self._tenant_live[req.tenant] <= 0:
+            self.qos.release(req.tenant)
 
     def _decode_kv_tail(self, cache):
         if "k" not in cache:
@@ -188,6 +233,8 @@ class ServeEngine:
             "done": len(done),
             "waiting": len(self.waiting),
             "active": len(self.active),
+            "shed": len(self.shed),
             "mean_ttft_s": float(np.mean(ttft)) if ttft else None,
             "kv": self.kv.stats(),
+            "qos": self.qos.snapshot() if self.qos else None,
         }

@@ -13,16 +13,25 @@ Event structure: because both stages are work-conserving single-queue rate
 limiters, the DES reduces to tracking each stage's next-free time while still
 processing every IO individually (so we get exact per-IO latencies and can
 mix hit/miss populations from the locality model).
+
+Multi-device mode (``simulate_shared_fabric``): N devices hammer ONE
+expander through a shared link — the scalability question the paper's Fig 6
+never answers.  The link is arbitrated by weighted max-min fairness
+(repro.qos.arbiter); each device's data stage is capped at its granted
+share, and every device's external index accesses see the congested tier
+latency (repro.qos / tiers.congested_latency) at the link's total load.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.tiers import congested_latency
+from repro.qos.arbiter import jain_fairness, weighted_max_min
 from repro.sim.ssd import Scheme, SSDSpec
 from repro.sim.workload import Workload
 
@@ -47,7 +56,17 @@ class SimResult:
 
 
 def simulate(spec: SSDSpec, scheme: Scheme, workload: Workload,
-             seed: Optional[int] = None) -> SimResult:
+             seed: Optional[int] = None, *,
+             data_rate_cap_iops: Optional[float] = None,
+             link_utilization: float = 0.0) -> SimResult:
+    """Closed-loop DES of one device.
+
+    ``data_rate_cap_iops`` throttles the data stage below the device's
+    Table-3 rate — the granted share of a shared expander link in
+    multi-device mode.  ``link_utilization`` inflates the external index
+    latency by the queueing model (0.0 = seed behaviour: alone on the
+    link).
+    """
     rng = np.random.default_rng(workload.seed if seed is None else seed)
     n = workload.n_ios
     qd = workload.queue_depth
@@ -55,6 +74,8 @@ def simulate(spec: SSDSpec, scheme: Scheme, workload: Workload,
 
     # ---- stage rates ------------------------------------------------------
     data_rate = spec.base_iops(pattern, op)
+    if data_rate_cap_iops is not None:
+        data_rate = min(data_rate, max(data_rate_cap_iops, 1.0))
     # Table-3 latencies are QD1 figures; at QD=64 the device pipelines, so
     # the steady-state per-IO latency is qd/rate (Little) — whichever is
     # smaller binds.  Without this the Ideal scheme could never reach the
@@ -67,10 +88,16 @@ def simulate(spec: SSDSpec, scheme: Scheme, workload: Workload,
     if needs_index:
         if scheme.name == "dftl":
             # flash-resident index: single outstanding flash index op
+            # (flash is device-local — link congestion does not apply)
             index_rate = spec.dftl_concurrency / scheme.t_tier_s
+            index_lat = scheme.t_tier_s
         else:
+            # Congestion adds *waiting* to each external access; the
+            # throughput cost of sharing is already the arbiter's grant cap
+            # (data_rate_cap_iops), so inflating the engine's sustained
+            # rate as well would double-count the link.
             index_rate = engine.rate(scheme.t_tier_s)
-        index_lat = scheme.t_tier_s
+            index_lat = congested_latency(scheme.t_tier_s, link_utilization)
     else:
         index_rate, index_lat = float("inf"), 0.0
 
@@ -112,4 +139,85 @@ def simulate(spec: SSDSpec, scheme: Scheme, workload: Workload,
         mean_lat_us=float(lat.mean() * 1e6),
         p99_lat_us=float(np.percentile(lat, 99) * 1e6),
         index_hit_ratio=float(hits.mean()) if needs_index else 1.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Multi-device shared-fabric mode (repro.qos)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SharedFabricResult:
+    """N devices sharing one expander link (the paper's scalability case)."""
+
+    n_devices: int
+    link_bandwidth_Bps: float
+    weights: List[float]
+    per_device: List[SimResult]
+    #: one device's unconstrained link demand (B/s)
+    demand_Bps: float
+    #: weighted max-min grants actually scheduled onto the link (B/s)
+    grants_Bps: List[float]
+    #: sum of achieved per-device goodput through the link (B/s)
+    aggregate_goodput_Bps: float
+    #: offered load relative to link capacity (>= achieved utilization)
+    offered_utilization: float
+    fairness_jain: float
+    mean_p99_us: float
+
+    def row(self) -> str:
+        return (f"{self.n_devices},{self.aggregate_goodput_Bps/1e9:.2f},"
+                f"{self.offered_utilization:.2f},{self.fairness_jain:.3f},"
+                f"{self.mean_p99_us:.1f}")
+
+
+def simulate_shared_fabric(spec: SSDSpec, scheme: Scheme, workload: Workload,
+                           n_devices: int,
+                           link_bandwidth_Bps: float = 30e9,
+                           weights: Optional[Sequence[float]] = None,
+                           ) -> SharedFabricResult:
+    """Fig-6 pipeline × N devices hammering ONE expander.
+
+    Each device stages its IO payloads through the expander (the paper's
+    shared-buffer scenario), so every IO moves ``workload.io_bytes`` over
+    the link.  The link is divided by weighted max-min fairness
+    (:func:`repro.qos.arbiter.weighted_max_min`); each device's data stage
+    is capped at its grant and its external index accesses see the
+    congested tier latency at the link's offered load.
+    """
+    if weights is None:
+        weights = [1.0] * n_devices
+    if len(weights) != n_devices:
+        raise ValueError(f"{len(weights)} weights for {n_devices} devices")
+
+    # one device's unconstrained throughput = its sustained link demand
+    base = simulate(spec, scheme, workload)
+    demand_Bps = base.iops * workload.io_bytes
+
+    names = [f"dev{i}" for i in range(n_devices)]
+    grants = weighted_max_min(
+        {nm: demand_Bps for nm in names},
+        {nm: w for nm, w in zip(names, weights)},
+        link_bandwidth_Bps)
+    offered = min(n_devices * demand_Bps / link_bandwidth_Bps, 1.0)
+
+    per_device: List[SimResult] = []
+    for i, nm in enumerate(names):
+        r = simulate(spec, scheme, workload, seed=workload.seed + i,
+                     data_rate_cap_iops=grants[nm] / workload.io_bytes,
+                     link_utilization=offered)
+        per_device.append(dataclasses.replace(r, device=f"{r.device}#{i}"))
+
+    goodputs = [r.iops * workload.io_bytes for r in per_device]
+    return SharedFabricResult(
+        n_devices=n_devices,
+        link_bandwidth_Bps=link_bandwidth_Bps,
+        weights=list(weights),
+        per_device=per_device,
+        demand_Bps=demand_Bps,
+        grants_Bps=[grants[nm] for nm in names],
+        aggregate_goodput_Bps=float(sum(goodputs)),
+        offered_utilization=offered,
+        fairness_jain=jain_fairness(goodputs),
+        mean_p99_us=float(np.mean([r.p99_lat_us for r in per_device])),
     )

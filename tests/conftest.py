@@ -14,3 +14,12 @@ jax.config.update("jax_enable_x64", False)
 @pytest.fixture
 def rng():
     return jax.random.key(0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_global_metrics():
+    """GLOBAL_METRICS is a process-global counter; without a reset,
+    per-test byte/transfer assertions leak across tests."""
+    from repro.core.metrics import GLOBAL_METRICS
+    GLOBAL_METRICS.reset()
+    yield

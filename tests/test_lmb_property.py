@@ -11,6 +11,8 @@ Invariants under arbitrary alloc/free/share interleavings:
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import (DeviceClass, DeviceInfo, LMBHost, LinkedBuffer,

@@ -32,11 +32,12 @@ def served():
 
 def make_engine(served, **kw):
     cfg, model, params = served
+    qos = kw.pop("qos", None)
     defaults = dict(decode_slots=2, max_seq_len=64, page_tokens=8,
                     onboard_pages=8, prefill_bucket=16)
     defaults.update(kw)
     return ServeEngine(model, params, fresh_host(), EngineConfig(
-        **defaults))
+        **defaults), qos=qos)
 
 
 def test_requests_complete(served):
@@ -130,3 +131,31 @@ def test_page_table_export(served):
     pt = kv.page_table(sid, 8)
     assert (pt >= 0).sum() == 3          # ceil(10/4)
     assert (pt[3:] == -1).all()
+
+
+def test_qos_admission_shed_and_slo_feedback(served):
+    """A tenant whose demand blows its own SLO on the shared link is shed;
+    a well-provisioned tenant completes and feeds its latency tracker."""
+    from repro.qos import AdmissionController, SLOTarget
+
+    ctrl = AdmissionController(link_bandwidth_Bps=10e9)
+    ctrl.register("gold", target=SLOTarget(p99_latency_s=10.0),
+                  demand_Bps=1e9, base_latency_s=0.01)
+    ctrl.register("abuser",
+                  target=SLOTarget(p99_latency_s=0.005, shed_factor=1.5),
+                  demand_Bps=9.5e9, base_latency_s=0.01)
+    eng = make_engine(served, qos=ctrl)
+    rng = np.random.default_rng(0)
+    gold = eng.submit(rng.integers(0, 100, 8), max_new_tokens=3,
+                      tenant="gold")
+    abuser = eng.submit(rng.integers(0, 100, 8), max_new_tokens=3,
+                        tenant="abuser")
+    eng.run(100)
+    assert eng.requests[gold].state == "done"
+    assert eng.requests[abuser].state == "shed"
+    st = eng.stats()
+    assert st["shed"] == 1
+    t = st["qos"]["tenants"]
+    assert t["abuser"]["shed_count"] == 1
+    assert t["gold"]["observed_p99_s"] is not None   # latency fed back
+    assert not t["gold"]["admitted"]                 # released on drain
