@@ -2,6 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 Run: ``PYTHONPATH=src python -m benchmarks.run`` (or ``--only fig6``).
+``--only`` takes a comma-separated list; ``--json PATH`` additionally
+writes the rows as JSON (CI uploads ``BENCH_ci.json`` per PR so the perf
+trajectory is tracked).
 """
 
 from __future__ import annotations
@@ -9,6 +12,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import platform
 import sys
 import time
 
@@ -16,8 +20,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+#: rows accumulated for --json output: (name, us_per_call, derived)
+_ROWS: list = []
+
 
 def _row(name: str, us: float, derived: str = "") -> None:
+    _ROWS.append({"name": name, "us_per_call": round(us, 3),
+                  "derived": derived})
     print(f"{name},{us:.3f},{derived}")
 
 
@@ -85,6 +94,67 @@ def bench_fabric_sweep() -> None:
          f"aggGBps={r.aggregate_goodput_Bps/1e9:.2f};"
          f"ratio={goodputs[0]/goodputs[1]:.2f};"
          f"p99us={r.mean_p99_us:.1f}")
+
+
+# --------------------------------- multi-expander hot/cold migration sweep
+def bench_migration_sweep() -> None:
+    """1 hot expander + 1 cold: every device starts on expander 0; hot-page
+    migration rebalances the pool and the hot expander's p99 index latency
+    recovers toward the uncontended baseline, at a reported migrated-bytes
+    overhead."""
+    from repro.sim import (make_ssd_model, make_workload,
+                           simulate_multi_expander)
+    from repro.sim.ssd import make_schemes
+    spec = make_ssd_model(5)
+    scheme = make_schemes(spec)["lmb-cxl"]
+    wl = make_workload("randread", n_ios=20_000)
+    link = 30e9
+    for n in (4, 8, 12):
+        t0 = time.perf_counter()
+        r = simulate_multi_expander(spec, scheme, wl, n, n_expanders=2,
+                                    link_bandwidth_Bps=link)
+        wall = (time.perf_counter() - t0) * 1e6
+        _row(f"migration_sweep.hotcold.n{n:02d}", wall,
+             f"p99us_before={r.hot_p99_before_us:.1f};"
+             f"p99us_after={r.hot_p99_after_us:.1f};"
+             f"p99us_baseline={r.baseline_p99_us:.1f};"
+             f"recovery={r.recovery_fraction:.2f};"
+             f"migMiB={r.migrated_bytes/2**20:.0f};"
+             f"migs={r.migration_wall_s*1e3:.1f}ms;"
+             f"rho={r.utilization_before[0]:.2f}->"
+             f"{max(r.utilization_after):.2f}")
+    # live end-to-end: LinkedBuffer thrash saturates expander 0's link,
+    # the MigrationEngine moves the hottest pages to expander 1
+    import jax.numpy as jnp
+    from repro.core import LMBHost, LinkedBuffer, make_multi_fabric
+    from repro.core.fabric import DeviceClass, DeviceInfo
+    from repro.core.metrics import Metrics
+    from repro.qos import MigrationEngine, MigrationPolicy
+    fm, _ = make_multi_fabric(n_expanders=2, pool_gib=1)
+    fm.bind_host("h0")
+    fm.register_device(DeviceInfo("d0", DeviceClass.PCIE))
+    host = LMBHost(fm, "h0", page_bytes=1 << 16, metrics=Metrics())
+    buf = LinkedBuffer(name="mig", device_id="d0", host=host,
+                       page_shape=(128, 128), dtype=jnp.float32,
+                       onboard_pages=4, lmb_chunk_pages=8,
+                       metrics=Metrics())
+    pages = buf.append_pages(32)
+    for p in pages:
+        buf.write(p, jnp.ones((128, 128)))
+    for _ in range(2):
+        for p in pages:
+            buf.read(p)                      # thrash: all traffic on exp 0
+    eng = MigrationEngine(fm, MigrationPolicy(max_pages_per_round=16))
+    eng.register(buf)
+    t0 = time.perf_counter()
+    rep = eng.run_once()
+    wall = (time.perf_counter() - t0) * 1e6
+    place = buf.lmb_placement()
+    _row("migration_sweep.live", wall,
+         f"moved={rep.pages_moved};migMiB={rep.bytes_moved/2**20:.1f};"
+         f"placement={place.get(0, 0)}:{place.get(1, 0)};"
+         f"util0={rep.utilization.get(0, 0.0):.2f};"
+         f"util1={rep.utilization.get(1, 0.0):.2f}")
 
 
 # --------------------------------------------------- §4.1.2 locality sweep
@@ -223,6 +293,7 @@ BENCHES = {
     "fig2": bench_fig2_latency,
     "fig6": bench_fig6,
     "fabric_sweep": bench_fabric_sweep,
+    "migration_sweep": bench_migration_sweep,
     "locality": bench_locality_sweep,
     "allocator": bench_allocator,
     "offload": bench_offload_overlap,
@@ -234,12 +305,28 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help=f"one of {sorted(BENCHES)}")
+                    help=f"comma-separated subset of {sorted(BENCHES)}")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (CI perf artifact)")
     args, _ = ap.parse_known_args()
-    names = [args.only] if args.only else list(BENCHES)
+    names = (args.only.split(",") if args.only else list(BENCHES))
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown bench(es) {unknown}; choose from "
+                 f"{sorted(BENCHES)}")
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()
+    if args.json:
+        payload = {
+            "benches": names,
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+            "rows": _ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(_ROWS)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

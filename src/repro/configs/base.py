@@ -8,7 +8,6 @@ small-but-same-family config used by CPU smoke tests.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Optional, Tuple
 
 # block types
@@ -206,8 +205,15 @@ def list_configs() -> Tuple[str, ...]:
 
 
 def _load_all() -> None:
-    # import for side effect of register()
-    from repro.configs import (chameleon_34b, command_r_plus_104b,  # noqa
-                               dbrx_132b, granite_34b, h2o_danube_3_4b,
-                               hymba_1_5b, mixtral_8x22b, qwen2_1_5b,
-                               rwkv6_7b, seamless_m4t_large_v2)
+    # import for side effect of register(); one per line so each alias
+    # carries its own noqa (ruff reports F401 at the alias's line)
+    from repro.configs import chameleon_34b  # noqa: F401
+    from repro.configs import command_r_plus_104b  # noqa: F401
+    from repro.configs import dbrx_132b  # noqa: F401
+    from repro.configs import granite_34b  # noqa: F401
+    from repro.configs import h2o_danube_3_4b  # noqa: F401
+    from repro.configs import hymba_1_5b  # noqa: F401
+    from repro.configs import mixtral_8x22b  # noqa: F401
+    from repro.configs import qwen2_1_5b  # noqa: F401
+    from repro.configs import rwkv6_7b  # noqa: F401
+    from repro.configs import seamless_m4t_large_v2  # noqa: F401

@@ -13,7 +13,8 @@ Layering (bottom-up):
 from repro.core.api import Allocation, LMBHost
 from repro.core.buffer import LinkedBuffer
 from repro.core.fabric import (AccessDenied, DeviceClass, DeviceInfo,
-                               FabricManager, make_default_fabric)
+                               FabricManager, make_default_fabric,
+                               make_multi_fabric)
 from repro.core.offload import TierExecutor, supports_in_jit_offload
 from repro.core.pool import (BLOCK_BYTES, BlockAllocator, Expander,
                              InvalidHandle, LMBError, MediaKind, OutOfMemory)
@@ -22,7 +23,8 @@ from repro.core.tiers import (TierKind, TierSpec, congested_latency,
 
 __all__ = [
     "Allocation", "LMBHost", "LinkedBuffer", "AccessDenied", "DeviceClass",
-    "DeviceInfo", "FabricManager", "make_default_fabric", "TierExecutor",
+    "DeviceInfo", "FabricManager", "make_default_fabric",
+    "make_multi_fabric", "TierExecutor",
     "supports_in_jit_offload", "BLOCK_BYTES", "BlockAllocator", "Expander",
     "InvalidHandle", "LMBError", "MediaKind", "OutOfMemory", "TierKind",
     "TierSpec", "congested_latency", "paper_tiers", "tpu_tiers",

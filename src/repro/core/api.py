@@ -24,8 +24,8 @@ from typing import Dict, Optional
 from repro.core.fabric import (AccessDenied, DeviceClass, DeviceInfo,
                                FabricManager)
 from repro.core.metrics import GLOBAL_METRICS, Metrics
-from repro.core.pool import (DEFAULT_PAGE_BYTES, BlockAllocator, InvalidHandle,
-                             LMBError, MediaKind, Region)
+from repro.core.pool import (DEFAULT_PAGE_BYTES, BlockAllocator, LMBError,
+                             MediaKind, Region)
 
 #: HPA window where expander blocks get mapped on the host (arbitrary base
 #: chosen above typical host DRAM; purely a modeling constant).
@@ -60,11 +60,32 @@ class LMBHost:
         self._expander_dpid = expander_dpid
         fm.bind_host(host_id) if host_id not in fm.snapshot()["hosts"] else None
         self.allocator = BlockAllocator(
-            request_block=lambda: fm.request_block(host_id, media),
+            request_block=lambda eid=None: fm.request_block(
+                host_id, media, expander_id=eid),
             return_block=lambda bid: fm.return_block(host_id, bid),
             page_bytes=page_bytes)
         # mmid -> set of device_ids with access (owner first)
         self._sharers: Dict[int, list[str]] = {}
+        # registered BEFORE any LinkedBuffer (they attach to this host
+        # afterwards), so allocator state for a dead expander is gone by
+        # the time consumers handle the same failover notification
+        fm.on_failover(self._on_failover)
+
+    def _on_failover(self, expander_id: int) -> None:
+        """Drop allocator bookkeeping for the failed expander's blocks —
+        the FM re-granted (or lost) them; keeping their free runs around
+        would let new allocations land on the dead expander.  Then adopt
+        the blank replacement grants, so the capacity the FM preserved
+        (and still charges against our quota) is actually allocatable."""
+        for mmid in self.allocator.drop_expander(expander_id):
+            self._sharers.pop(mmid, None)
+        # adopt only replacements on HEALTHY expanders — after a total-pool
+        # failure held_grants still lists dead blocks, and re-adopting them
+        # would let allocations silently land on dead capacity
+        healthy = set(self.fm.healthy_expander_ids())
+        for grant in self.fm.held_grants(self.host_id):
+            if grant.expander_id in healthy:
+                self.allocator.adopt_block(grant)
 
     # -- HPA mapping -----------------------------------------------------------
     def _hpa_of(self, region: Region) -> int:
@@ -79,9 +100,11 @@ class LMBHost:
         return self._hpa_of(region)
 
     # -- Table 2: alloc ----------------------------------------------------------
-    def _alloc(self, device_id: str, nbytes: int) -> Allocation:
+    def _alloc(self, device_id: str, nbytes: int,
+               expander_id: Optional[int] = None) -> Allocation:
         device = self.fm.device(device_id)
-        region = self.allocator.alloc(device_id, nbytes)
+        region = self.allocator.alloc(device_id, nbytes,
+                                      expander_id=expander_id)
         self.fm.authorize(device_id, region.block_id, region.page_start,
                           region.npages)
         self._sharers[region.mmid] = [device_id]
@@ -95,15 +118,17 @@ class LMBHost:
             dpid=(self._expander_dpid
                   if device.device_class is DeviceClass.CXL else None))
 
-    def lmb_pcie_alloc(self, device_id: str, nbytes: int) -> Allocation:
+    def lmb_pcie_alloc(self, device_id: str, nbytes: int,
+                       expander_id: Optional[int] = None) -> Allocation:
         if self.fm.device(device_id).device_class is not DeviceClass.PCIE:
             raise LMBError(f"{device_id} is not a PCIe device")
-        return self._alloc(device_id, nbytes)
+        return self._alloc(device_id, nbytes, expander_id)
 
-    def lmb_cxl_alloc(self, device_id: str, nbytes: int) -> Allocation:
+    def lmb_cxl_alloc(self, device_id: str, nbytes: int,
+                      expander_id: Optional[int] = None) -> Allocation:
         if self.fm.device(device_id).device_class is not DeviceClass.CXL:
             raise LMBError(f"{device_id} is not a CXL device")
-        return self._alloc(device_id, nbytes)
+        return self._alloc(device_id, nbytes, expander_id)
 
     # -- Table 2: free -------------------------------------------------------------
     def _free(self, device_id: str, mmid: int) -> None:
@@ -170,12 +195,21 @@ class LMBHost:
         self.fm.check_access(device_id, region.block_id,
                              region.page_start + page)
 
-    def meter_transfer(self, device_id: str, nbytes: int) -> float:
+    def meter_transfer(self, device_id: str, nbytes: int,
+                       mmid: Optional[int] = None) -> float:
         """Charge an expander-link transfer to this device's QoS share;
         returns the modeled delay (queue + wire) in seconds.  Every byte a
         consumer moves to/from the LMB tier should pass through here so the
-        FM's arbiter sees true link occupancy."""
-        return self.fm.meter_transfer(device_id, nbytes).delay_s
+        FM's arbiters see true link occupancy.  ``mmid`` routes the charge
+        to the link of the expander actually backing the region."""
+        block_id = (self.allocator.region(mmid).block_id
+                    if mmid is not None else None)
+        return self.fm.meter_transfer(device_id, nbytes,
+                                      block_id=block_id).delay_s
+
+    def expander_of(self, mmid: int) -> int:
+        """Which pooled expander backs this allocation (placement query)."""
+        return self.allocator.expander_of(mmid)
 
     def owned_bytes(self, device_id: str) -> int:
         return self.allocator.owned_bytes(device_id)

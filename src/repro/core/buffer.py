@@ -17,17 +17,22 @@ Capabilities:
   * refcounted page sharing + copy-on-write (zero-copy prefix sharing, the
     paper's SSD→accelerator shared-buffer scenario)
   * degraded mode on expander failure (availability: fall back to
-    onboard-only, shedding capacity rather than dying)
+    onboard-only, shedding capacity rather than dying); on a pooled
+    fabric a partial failure only invalidates the pages homed on the
+    dead expander
   * optional **int8 page compression on demotion** (``compress_lmb``) —
     beyond-paper: cold pages cost 1/4 the pool bytes and PCIe traffic
     (per-page absmax scale kept in HOST metadata, like all LMB metadata);
     lossy (~1e-2 relative) — suited to KV caches, not optimizer state
+  * **per-page access heat** (exponentially-decayed touch counters fed by
+    the link-metering path) + :meth:`migrate_pages`, the mechanism the
+    MigrationEngine (repro.qos.migration) uses to move hot LMB pages off
+    a saturated expander link onto a cooler one
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -38,7 +43,7 @@ from repro.core.api import Allocation, LMBHost
 from repro.core.metrics import Metrics, GLOBAL_METRICS
 from repro.core.offload import TierExecutor
 from repro.core.policy import EvictionPolicy, Prefetcher, make_policy
-from repro.core.pool import LMBError, OutOfMemory
+from repro.core.pool import OutOfMemory
 
 ONBOARD = "onboard"
 LMB = "lmb"
@@ -91,7 +96,20 @@ class LinkedBuffer:
         # caller's executor carries a meter hook AND actually fires it
         # (only on real host tiers — in pure modeling mode the executor
         # can't tell LMB pools from device arrays), defer to it to avoid
-        # double-charging the same page move.
+        # double-charging the same page move.  On a POOLED fabric the
+        # buffer always meters itself: only it knows which expander backs
+        # the touched chunk, while an executor hook is a bare meter(nbytes)
+        # that would dump everything on the fallback link — so don't bind
+        # an executor meter over a multi-expander FM.
+        pooled = len(host.fm.healthy_expander_ids()) > 1
+        if (pooled and self.executor.meter is not None
+                and self.executor.real_host_tier):
+            raise ValueError(
+                f"{name}: an executor-level meter hook cannot attribute "
+                "transfers to an expander on a pooled fabric (and the "
+                "buffer's own per-block metering would double-charge); "
+                "construct the TierExecutor without meter= and let the "
+                "buffer meter")
         self._meter_via_executor = (self.executor.meter is not None
                                     and self.executor.real_host_tier)
         self.link_wait_s = 0.0
@@ -104,10 +122,20 @@ class LinkedBuffer:
 
         self._lmb_chunk_pages = lmb_chunk_pages
         self._lmb_scales: Dict[int, float] = {}   # slot -> absmax scale
-        self._lmb_pools: List[jax.Array] = []
-        self._lmb_allocs: List[Allocation] = []
+        self._lmb_pools: List[Optional[jax.Array]] = []  # None = reclaimed
+        self._lmb_allocs: List[Optional[Allocation]] = []
         self._lmb_free: List[int] = []            # global lmb slot ids
         self._lmb_owner: Dict[int, int] = {}
+        self._lmb_homes: List[int] = []           # chunk -> expander id
+        self._lmb_used: List[int] = []            # chunk -> occupied slots
+
+        # access heat: exponentially-decayed touch counters, bumped on the
+        # link-metering path (every byte a page moves over an expander link
+        # is a vote for migrating it somewhere cooler).  Lazy decay: store
+        # (value, clock-at-touch) and age on read.
+        self.heat_decay = 0.95
+        self._heat: Dict[int, Tuple[float, int]] = {}
+        self._heat_clock = 0
 
         self._pages: List[PageEntry] = []
 
@@ -129,45 +157,86 @@ class LinkedBuffer:
         self._pages.extend(PageEntry() for _ in range(n))
         return list(range(base, base + n))
 
-    def _grow_lmb(self) -> None:
+    def _grow_lmb(self, expander_id: Optional[int] = None) -> None:
         if self.degraded:
             raise OutOfMemory(f"{self.name}: LMB tier unavailable (degraded)")
         chunk_bytes = self._lmb_chunk_pages * self.lmb_page_bytes
-        alloc = self.host.lmb_pcie_alloc(self.device_id, chunk_bytes)
+        alloc = self.host.lmb_pcie_alloc(self.device_id, chunk_bytes,
+                                         expander_id=expander_id)
         pool = self.executor.alloc_pool(
             self._lmb_chunk_pages, self.page_shape,
             jnp.int8 if self.compress_lmb else self.dtype, tier="lmb")
         chunk_idx = len(self._lmb_pools)
         self._lmb_pools.append(pool)
         self._lmb_allocs.append(alloc)
+        self._lmb_homes.append(self.host.expander_of(alloc.mmid))
+        self._lmb_used.append(0)
         base = chunk_idx * self._lmb_chunk_pages
         self._lmb_free.extend(range(base, base + self._lmb_chunk_pages))
 
-    def _lmb_slot_alloc(self) -> int:
-        if not self._lmb_free:
-            self._grow_lmb()
-        return self._lmb_free.pop()
+    def _lmb_slot_alloc(self, expander_id: Optional[int] = None) -> int:
+        """Take a free LMB slot; ``expander_id`` restricts the slot to a
+        chunk homed on that expander (migration placement)."""
+        if expander_id is None:
+            if not self._lmb_free:
+                self._grow_lmb()
+            slot = self._lmb_free.pop()
+        else:
+            idx = next(
+                (i for i, s in enumerate(self._lmb_free)
+                 if self._lmb_homes[s // self._lmb_chunk_pages]
+                 == expander_id), None)
+            if idx is None:
+                self._grow_lmb(expander_id)
+                idx = len(self._lmb_free) - 1
+            slot = self._lmb_free.pop(idx)
+        self._lmb_used[slot // self._lmb_chunk_pages] += 1
+        return slot
 
-    def _meter_link(self) -> None:
+    def _lmb_slot_free(self, slot: int) -> None:
+        self._lmb_free.append(slot)
+        self._lmb_used[slot // self._lmb_chunk_pages] -= 1
+        self._lmb_scales.pop(slot, None)
+
+    def _touch_heat(self, page: int) -> None:
+        self._heat_clock += 1
+        val, at = self._heat.get(page, (0.0, self._heat_clock))
+        val *= self.heat_decay ** (self._heat_clock - at)
+        self._heat[page] = (val + 1.0, self._heat_clock)
+
+    def page_heat(self, page: int) -> float:
+        """Decayed touch count: how hot this page runs on the LMB link."""
+        val, at = self._heat.get(page, (0.0, self._heat_clock))
+        return val * self.heat_decay ** (self._heat_clock - at)
+
+    def _meter_link(self, chunk: Optional[int] = None,
+                    page: Optional[int] = None) -> None:
+        if page is not None:
+            self._touch_heat(page)
         if not self._meter_via_executor:
+            alloc = (self._lmb_allocs[chunk]
+                     if chunk is not None else None)
             self.link_wait_s += self.host.meter_transfer(
-                self.device_id, self.lmb_page_bytes)
+                self.device_id, self.lmb_page_bytes,
+                mmid=alloc.mmid if alloc is not None else None)
 
-    def _lmb_read(self, slot: int) -> jax.Array:
+    def _lmb_read(self, slot: int, page: Optional[int] = None) -> jax.Array:
         chunk, off = divmod(slot, self._lmb_chunk_pages)
         # access-control check on the data path (IOMMU/SAT)
         self.host.check_access(self.device_id, self._lmb_allocs[chunk].mmid)
-        self._meter_link()
-        page = self.executor.read_page(self._lmb_pools[chunk], off)
+        self._meter_link(chunk, page)
+        page_data = self.executor.read_page(self._lmb_pools[chunk], off)
         if self.compress_lmb:
             scale = self._lmb_scales.pop(slot, 0.0)
-            page = (page.astype(jnp.float32) * scale).astype(self.dtype)
-        return page
+            page_data = (page_data.astype(jnp.float32)
+                         * scale).astype(self.dtype)
+        return page_data
 
-    def _lmb_write(self, slot: int, data: jax.Array) -> None:
+    def _lmb_write(self, slot: int, data: jax.Array,
+                   page: Optional[int] = None) -> None:
         chunk, off = divmod(slot, self._lmb_chunk_pages)
         self.host.check_access(self.device_id, self._lmb_allocs[chunk].mmid)
-        self._meter_link()
+        self._meter_link(chunk, page)
         if self.compress_lmb:
             f = data.astype(jnp.float32)
             amax = float(jnp.max(jnp.abs(f))) + 1e-12
@@ -191,10 +260,10 @@ class LinkedBuffer:
         if self.degraded:
             raise OutOfMemory(
                 f"{self.name}: degraded mode — working set exceeds onboard "
-                f"capacity and the LMB tier is gone")
+                "capacity and the LMB tier is gone")
         lmb_slot = self._lmb_slot_alloc()
         page = self.executor.read_page(self._onboard_pool, slot)
-        self._lmb_write(lmb_slot, page)
+        self._lmb_write(lmb_slot, page, victim)
         self.metrics.record_move(self.name, ONBOARD, LMB,
                                  self.lmb_page_bytes)
         entry.tier, entry.slot, entry.dirty = LMB, lmb_slot, False
@@ -218,12 +287,12 @@ class LinkedBuffer:
         self.metrics.record_miss(self.name, ONBOARD, self.page_bytes)
         slot = self._onboard_slot_alloc()
         if entry.tier == LMB:
-            data = self._lmb_read(entry.slot)
+            data = self._lmb_read(entry.slot, page)
             self._onboard_pool = self.executor.write_page(
                 self._onboard_pool, slot, data)
             self.metrics.record_move(self.name, LMB, ONBOARD,
                                      self.lmb_page_bytes)
-            self._lmb_free.append(entry.slot)
+            self._lmb_slot_free(entry.slot)
             self._lmb_owner.pop(entry.slot, None)
         else:
             # first touch: zero-fill
@@ -236,7 +305,7 @@ class LinkedBuffer:
         if self.prefetcher:
             self.prefetcher.observe(page)
             for p in self.prefetcher.suggest(self.num_pages - 1):
-                if self._pages[p].tier == LMB and (self._onboard_free or True):
+                if self._pages[p].tier == LMB and self._onboard_free:
                     try:
                         self._prefetch(p)
                     except OutOfMemory:
@@ -250,12 +319,12 @@ class LinkedBuffer:
         if not self._onboard_free:
             return  # never evict to prefetch
         slot = self._onboard_free.pop()
-        data = self._lmb_read(entry.slot)
+        data = self._lmb_read(entry.slot, page)
         self._onboard_pool = self.executor.write_page(
             self._onboard_pool, slot, data)
         self.metrics.record_move(self.name, LMB, ONBOARD,
                                  self.lmb_page_bytes)
-        self._lmb_free.append(entry.slot)
+        self._lmb_slot_free(entry.slot)
         self._lmb_owner.pop(entry.slot, None)
         entry.tier, entry.slot, entry.dirty = ONBOARD, slot, False
         self._onboard_owner[slot] = page
@@ -323,7 +392,7 @@ class LinkedBuffer:
             self._onboard_free.append(entry.slot)
             self._onboard_owner.pop(entry.slot, None)
         elif entry.tier == LMB:
-            self._lmb_free.append(entry.slot)
+            self._lmb_slot_free(entry.slot)
             self._lmb_owner.pop(entry.slot, None)
         entry.tier, entry.slot, entry.dirty = None, -1, False
         entry.refcount = 0
@@ -345,24 +414,143 @@ class LinkedBuffer:
         # bookkeeping for "who else maps it" lives in the serving layer,
         # which tracks logical page ids per request.
 
-    # ------------------------------------------------------------ failure path
-    def _on_failover(self) -> None:
-        """Expander failed over to a spare: contents of the LMB tier are
-        gone (new expander is blank).  Pages that were in the LMB tier revert
-        to 'never written' (zeros on next touch); consumers holding a
-        journal (checkpoint) re-populate.  Without a spare we enter degraded
-        mode instead (see inject_failure in fabric.py)."""
-        if not self.host.fm.healthy:
-            self.degraded = True
-            return
-        for i, e in enumerate(self._pages):
+    # --------------------------------------------------------- hot-page moves
+    def page_expander(self, page: int) -> Optional[int]:
+        """Which expander homes this page's LMB slot (None if not in LMB)."""
+        entry = self._pages[page]
+        if entry.tier != LMB:
+            return None
+        return self._lmb_homes[entry.slot // self._lmb_chunk_pages]
+
+    def lmb_placement(self) -> Dict[int, int]:
+        """LMB-resident page count per home expander."""
+        out: Dict[int, int] = {}
+        for e in self._pages:
             if e.tier == LMB:
+                home = self._lmb_homes[e.slot // self._lmb_chunk_pages]
+                out[home] = out.get(home, 0) + 1
+        return out
+
+    def hottest_pages(self, limit: int,
+                      expander_id: Optional[int] = None,
+                      min_heat: float = 0.0) -> List[int]:
+        """LMB-resident pages by descending access heat — the migration
+        candidates for one saturated expander."""
+        cands = []
+        for p, e in enumerate(self._pages):
+            if e.tier != LMB:
+                continue
+            if (expander_id is not None
+                    and self.page_expander(p) != expander_id):
+                continue
+            h = self.page_heat(p)
+            if h < min_heat:
+                continue
+            cands.append((h, p))
+        cands.sort(reverse=True)
+        return [p for _, p in cands[:limit]]
+
+    def migrate_pages(self, pages: Sequence[int], dst_expander: int) -> int:
+        """Move LMB-resident pages onto chunks homed on ``dst_expander``.
+
+        Contents are preserved (read from the source chunk, written to the
+        destination chunk); both links are metered, so migration traffic is
+        visible as occupancy on each side.  Source chunks left empty are
+        reclaimed, which frees their allocation and revokes the device's
+        SAT/IOMMU entries on the source blocks — the destination grant was
+        authorized when its chunk was allocated (the failover re-grant
+        machinery).  Returns the number of pages actually moved: when the
+        destination refuses growth (quota or pool exhausted) the batch
+        stops early with every remaining page intact on its source."""
+        moved = 0
+        for page in pages:
+            self._check(page)
+            entry = self._pages[page]
+            if entry.tier != LMB:
+                continue
+            src_slot = entry.slot
+            src_home = self._lmb_homes[src_slot // self._lmb_chunk_pages]
+            if src_home == dst_expander:
+                continue
+            # allocate the destination FIRST: an OutOfMemory (quota, full
+            # pool) must fire before the source page is touched — with
+            # compress_lmb a read pops the source's scale, so failing
+            # mid-move would corrupt the page
+            try:
+                dst_slot = self._lmb_slot_alloc(expander_id=dst_expander)
+            except OutOfMemory:
+                break
+            data = self._lmb_read(src_slot, None)       # meters source link
+            self._lmb_write(dst_slot, data, None)       # meters dest link
+            entry.slot = dst_slot
+            self._lmb_owner[dst_slot] = page
+            self._lmb_owner.pop(src_slot, None)
+            self._lmb_slot_free(src_slot)
+            self.metrics.record_move(self.name, f"{LMB}@{src_home}",
+                                     f"{LMB}@{dst_expander}",
+                                     self.lmb_page_bytes)
+            moved += 1
+        if moved:
+            self._reclaim_empty_chunks()
+        return moved
+
+    def _reclaim_empty_chunks(self) -> None:
+        """Free fully-empty LMB chunks back through the Table-2 API (which
+        revokes this device's SAT/IOMMU entries and may return the 256 MB
+        block to the FM)."""
+        for chunk, used in enumerate(self._lmb_used):
+            if used != 0 or self._lmb_pools[chunk] is None:
+                continue
+            base = chunk * self._lmb_chunk_pages
+            self._lmb_free = [
+                s for s in self._lmb_free
+                if not base <= s < base + self._lmb_chunk_pages]
+            self.host.lmb_pcie_free(self.device_id,
+                                    self._lmb_allocs[chunk].mmid)
+            self._lmb_pools[chunk] = None
+            self._lmb_allocs[chunk] = None
+            self._lmb_homes[chunk] = -1
+
+    # ------------------------------------------------------------ failure path
+    def _on_failover(self, expander_id: Optional[int] = None) -> None:
+        """An expander failed.  Pages homed on it are gone (re-granted
+        blocks are blank): they revert to 'never written' (zeros on next
+        touch); consumers holding a journal (checkpoint) re-populate.
+        Pages homed on surviving pooled expanders are untouched.  With
+        nowhere to fail over to we enter degraded mode instead (see
+        inject_failure in fabric.py)."""
+        if not self.host.fm.healthy:
+            # last expander died: the LMB tier is gone for good — shed its
+            # pages below, and refuse future growth
+            self.degraded = True
+        dead = {chunk for chunk, home in enumerate(self._lmb_homes)
+                if self._lmb_pools[chunk] is not None
+                and (expander_id is None or home == expander_id)}
+        if not dead:
+            return
+        for e in self._pages:
+            if e.tier == LMB and e.slot // self._lmb_chunk_pages in dead:
                 e.tier, e.slot, e.dirty = None, -1, False
-        self._lmb_pools.clear()
-        self._lmb_allocs.clear()
-        self._lmb_free.clear()
-        self._lmb_owner.clear()
-        self.metrics.event(self.name, "failover: LMB pages invalidated")
+        for slot in [s for s in self._lmb_owner
+                     if s // self._lmb_chunk_pages in dead]:
+            del self._lmb_owner[slot]
+        for slot in [s for s in self._lmb_scales
+                     if s // self._lmb_chunk_pages in dead]:
+            del self._lmb_scales[slot]
+        self._lmb_free = [s for s in self._lmb_free
+                          if s // self._lmb_chunk_pages not in dead]
+        for chunk in dead:
+            # the FM re-granted the underlying blocks blank; the old
+            # allocation bookkeeping is unrecoverable, so drop references
+            # without freeing (the journal is the recovery source of truth)
+            self._lmb_pools[chunk] = None
+            self._lmb_allocs[chunk] = None
+            self._lmb_homes[chunk] = -1
+            self._lmb_used[chunk] = 0
+        self.metrics.event(
+            self.name, "failover: LMB pages on expander "
+                       f"{'*' if expander_id is None else expander_id} "
+                       "invalidated")
 
     # --------------------------------------------------------------- validation
     def _check(self, page: int) -> None:
@@ -377,9 +565,18 @@ class LinkedBuffer:
             self.onboard_pages, "onboard slot leak"
         lmb_slots = [e.slot for e in self._pages if e.tier == LMB]
         assert len(lmb_slots) == len(set(lmb_slots)), "lmb slot aliasing"
-        total_lmb = len(self._lmb_pools) * self._lmb_chunk_pages
+        alive = [c for c, p in enumerate(self._lmb_pools) if p is not None]
+        total_lmb = len(alive) * self._lmb_chunk_pages
         assert len(lmb_slots) + len(self._lmb_free) == total_lmb, \
             "lmb slot leak"
+        for slot in lmb_slots + self._lmb_free:
+            assert self._lmb_pools[slot // self._lmb_chunk_pages] \
+                is not None, "slot points at reclaimed chunk"
+        for chunk in alive:
+            base = chunk * self._lmb_chunk_pages
+            used = sum(1 for s in lmb_slots
+                       if base <= s < base + self._lmb_chunk_pages)
+            assert used == self._lmb_used[chunk], "chunk occupancy drift"
         for slot, page in self._onboard_owner.items():
             e = self._pages[page]
             assert e.tier == ONBOARD and e.slot == slot, "owner map stale"
@@ -397,4 +594,5 @@ class LinkedBuffer:
             "degraded": self.degraded,
             "link_wait_s": self.link_wait_s,
             "link_utilization": self.host.fm.link_utilization(),
+            "lmb_placement": self.lmb_placement(),
         }

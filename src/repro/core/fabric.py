@@ -3,7 +3,9 @@
 The FM "controls aspects of the system related to binding and management of
 pooled ports and devices" (paper Table 1).  Here it:
 
-  * owns one or more Expanders (GFDs) and grants/releases 256 MB blocks,
+  * owns a **pooled set of Expanders** (GFDs) and grants/releases 256 MB
+    blocks, tracking which expander backs each block (block→expander
+    placement) and arbitrating each expander's link independently,
   * maintains the **SAT** (SPID Access Table) authorizing CXL devices, and
     IOMMU-style per-PCIe-device mapping tables,
   * supports **dynamic capacity**: per-host quotas that can be raised or
@@ -11,9 +13,10 @@ pooled ports and devices" (paper Table 1).  Here it:
   * supports **failure injection + recovery** — the paper calls out that "a
     single failure in the memory expander can render all devices unavailable";
     we journal every grant so that consumers can rebuild after fail-over to a
-    spare expander,
+    spare expander (or onto the surviving pooled expanders),
   * keeps an **allocation journal** that makes the pool reconstructible
-    (needed by the training checkpoint/restore path).
+    (needed by the training checkpoint/restore path); hot-page migrations
+    (repro.qos.migration) are journaled the same way DCD capacity events are.
 """
 
 from __future__ import annotations
@@ -21,10 +24,12 @@ from __future__ import annotations
 import dataclasses
 import enum
 import threading
-from typing import Callable, Dict, List, Optional, Set, Tuple
+from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple,
+                    Union)
 
-from repro.core.pool import (BLOCK_BYTES, BlockGrant, Expander, InvalidHandle,
-                             LMBError, MediaKind, OutOfMemory)
+from repro.core.pool import (BLOCK_BYTES, BlockGrant, Expander,
+                             InvalidHandle, LMBError, MediaKind,
+                             OutOfMemory)
 from repro.qos.arbiter import LinkArbiter, TransferGrant
 
 #: default per-expander link bandwidth (matches the LMB_CXL tier's 30 GB/s)
@@ -73,6 +78,12 @@ class SAT:
     def check(self, spid: int, block_id: int) -> bool:
         return block_id in self._table.get(spid, set())
 
+    def purge_block(self, block_id: int) -> None:
+        """Drop every SPID's authorization for a block that no longer
+        exists (failover re-grant of a dead expander's block)."""
+        for spids in self._table.values():
+            spids.discard(block_id)
+
     def entries(self) -> Dict[int, Set[int]]:
         return {k: set(v) for k, v in self._table.items()}
 
@@ -103,6 +114,12 @@ class IOMMUTable:
     def check(self, device_id: str, block_id: int, page: int) -> bool:
         return page in self._maps.get(device_id, {}).get(block_id, set())
 
+    def purge_block(self, block_id: int) -> None:
+        """Drop every device's mappings into a block that no longer
+        exists (failover re-grant of a dead expander's block)."""
+        for blocks in self._maps.values():
+            blocks.pop(block_id, None)
+
     def mapped_pages(self, device_id: str) -> int:
         return sum(len(p) for p in self._maps.get(device_id, {}).values())
 
@@ -116,34 +133,120 @@ class JournalEntry:
 
 
 class FabricManager:
-    """FM: binds hosts/devices to expander capacity; single control point."""
+    """FM: binds hosts/devices to pooled expander capacity; single control
+    point.
 
-    def __init__(self, expander: Expander,
+    ``expander`` may be one :class:`Expander` (the paper's single-GFD setup)
+    or a sequence of them (pooled multi-expander fabric).  Each expander has
+    its own CXL link, arbitrated by its own :class:`LinkArbiter`; block
+    grants record which expander backs them so the data path charges the
+    right link and hot-page migration can rebalance placement.
+    """
+
+    def __init__(self, expander: Union[Expander, Sequence[Expander]],
                  spare: Optional[Expander] = None,
                  link_bandwidth_Bps: float = DEFAULT_LINK_BW_Bps):
         self._lock = threading.RLock()
-        self._expander = expander
+        exps = (list(expander) if isinstance(expander, (list, tuple))
+                else [expander])
+        if not exps:
+            raise ValueError("at least one expander required")
+        ids = [e.expander_id for e in exps]
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate expander ids: {ids}")
+        self._link_bandwidth_Bps = float(link_bandwidth_Bps)
+        self._expanders: Dict[int, Expander] = {
+            e.expander_id: e for e in exps}
+        self._arbiters: Dict[int, LinkArbiter] = {
+            eid: LinkArbiter(link_bandwidth_Bps) for eid in self._expanders}
         self._spare = spare
+        if spare is not None and spare.expander_id in self._expanders:
+            # standby joins the pool on promotion; give it a free id now
+            # (refuses if the spare already granted blocks)
+            spare.renumber(max(self._expanders) + 1)
         self._hosts: Dict[str, int] = {}       # host_id -> quota bytes
         self._devices: Dict[str, DeviceInfo] = {}
         self._granted: Dict[str, List[BlockGrant]] = {}
+        self._block_home: Dict[int, int] = {}  # block_id -> expander_id
         self.sat = SAT()
         self.iommu = IOMMUTable()
         self.journal: List[JournalEntry] = []
-        self._failover_listeners: List[Callable[[], None]] = []
-        #: link-bandwidth arbiter — the bandwidth analogue of the capacity
-        #: quotas above; devices are its tenants (registered on
-        #: register_device, re-weighted through set_bw_share)
-        self.arbiter = LinkArbiter(link_bandwidth_Bps)
+        self._failover_listeners: List[Callable[[int], None]] = []
+
+    # -- expander set --------------------------------------------------------
+    @property
+    def expander_ids(self) -> List[int]:
+        return list(self._expanders)
+
+    @property
+    def arbiter(self) -> LinkArbiter:
+        """The first HEALTHY expander's link arbiter (single-expander
+        back-compat; also the metering fallback when a transfer can't be
+        attributed to a block) — a dead expander's frozen arbiter would
+        swallow traffic invisibly."""
+        healthy = self._healthy_expanders()
+        eid = (healthy[0].expander_id if healthy
+               else next(iter(self._expanders)))
+        return self._arbiters[eid]
+
+    def _healthy_expanders(self) -> List[Expander]:
+        return [e for e in self._expanders.values() if not e.failed]
+
+    def expander_of(self, block_id: int) -> int:
+        eid = self._block_home.get(block_id)
+        if eid is None:
+            raise InvalidHandle(f"block {block_id} has no home expander")
+        return eid
+
+    def _coolest(self, media: MediaKind,
+                 exclude: Sequence[int] = (),
+                 require_room: bool = True) -> Optional[Expander]:
+        """The ONE placement criterion: healthy expander with the coolest
+        link and (unless ``require_room`` is off) at least a block of
+        ``media`` free — free space breaks utilization ties.  Shared by
+        block placement and migration targeting so the two policies
+        cannot drift."""
+        cands = [e for e in self._healthy_expanders()
+                 if e.expander_id not in exclude
+                 and (not require_room
+                      or e.free_bytes(media) >= BLOCK_BYTES)]
+        if not cands:
+            return None
+        return min(cands,
+                   key=lambda e: (self._arbiters[e.expander_id].utilization(),
+                                  -e.free_bytes(media), e.expander_id))
+
+    def _pick_expander(self, media: MediaKind,
+                       expander_id: Optional[int] = None) -> Expander:
+        """Block placement: requested expander, else the coolest healthy
+        expander with room."""
+        if expander_id is not None:
+            exp = self._expanders.get(expander_id)
+            if exp is None:
+                raise InvalidHandle(f"unknown expander {expander_id}")
+            if exp.failed:
+                raise LMBError(f"expander {expander_id} failed")
+            return exp
+        healthy = self._healthy_expanders()
+        if not healthy:
+            raise LMBError("no healthy expander in the pool")
+        exp = self._coolest(media)
+        if exp is None:
+            return healthy[0]               # let grant_block raise OOM
+        return exp
 
     # -- binding -------------------------------------------------------------
     def bind_host(self, host_id: str, quota_bytes: Optional[int] = None) -> None:
         with self._lock:
             quota = (quota_bytes if quota_bytes is not None
-                     else self._expander.total_bytes)
+                     else self.total_bytes)
             self._hosts[host_id] = quota
             self._granted.setdefault(host_id, [])
             self.journal.append(JournalEntry("bind", host_id))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(e.total_bytes for e in self._expanders.values())
 
     def set_quota(self, host_id: str, quota_bytes: int) -> None:
         """Dynamic capacity (DCD): change a host's allowance at runtime."""
@@ -159,8 +262,9 @@ class FabricManager:
             if info.device_class is DeviceClass.CXL and info.spid is None:
                 raise ValueError("CXL device needs an SPID")
             self._devices[info.device_id] = info
-            self.arbiter.register(info.device_id, weight=info.bw_weight,
-                                  burst_bytes=info.bw_burst_bytes)
+            for arb in self._arbiters.values():
+                arb.register(info.device_id, weight=info.bw_weight,
+                             burst_bytes=info.bw_burst_bytes)
 
     def device(self, device_id: str) -> DeviceInfo:
         info = self._devices.get(device_id)
@@ -170,7 +274,8 @@ class FabricManager:
 
     # -- block grant/release (called by host BlockAllocators) ----------------
     def request_block(self, host_id: str,
-                      media: MediaKind = MediaKind.DRAM) -> BlockGrant:
+                      media: MediaKind = MediaKind.DRAM,
+                      expander_id: Optional[int] = None) -> BlockGrant:
         with self._lock:
             if host_id not in self._hosts:
                 raise InvalidHandle(f"host {host_id} not bound")
@@ -179,9 +284,13 @@ class FabricManager:
                 raise OutOfMemory(
                     f"host {host_id} quota exceeded "
                     f"({held + BLOCK_BYTES} > {self._hosts[host_id]})")
-            grant = self._active().grant_block(host_id, media)
+            exp = self._pick_expander(media, expander_id)
+            grant = exp.grant_block(host_id, media)
             self._granted[host_id].append(grant)
-            self.journal.append(JournalEntry("grant", host_id, grant.block_id))
+            self._block_home[grant.block_id] = exp.expander_id
+            self.journal.append(
+                JournalEntry("grant", host_id, grant.block_id,
+                             detail=f"expander={exp.expander_id}"))
             return grant
 
     def return_block(self, host_id: str, block_id: int) -> None:
@@ -190,7 +299,10 @@ class FabricManager:
             for i, g in enumerate(grants):
                 if g.block_id == block_id:
                     grants.pop(i)
-                    self._active().release_block(block_id)
+                    eid = self._block_home.pop(block_id, None)
+                    exp = self._expanders.get(eid)
+                    if exp is not None and not exp.failed:
+                        exp.release_block(block_id)
                     self.journal.append(
                         JournalEntry("release", host_id, block_id))
                     return
@@ -201,34 +313,89 @@ class FabricManager:
         with self._lock:
             return len(self._granted.get(host_id, [])) * BLOCK_BYTES
 
-    # -- bandwidth quotas (the DCD analogue for the shared link) --------------
+    def held_grants(self, host_id: str) -> List[BlockGrant]:
+        """The host's live block grants (failover replacements included) —
+        lets a host allocator reconcile after a re-grant."""
+        with self._lock:
+            return list(self._granted.get(host_id, []))
+
+    def healthy_expander_ids(self) -> List[int]:
+        return [e.expander_id for e in self._healthy_expanders()]
+
+    # -- bandwidth quotas (the DCD analogue for the shared links) -------------
     def set_bw_share(self, device_id: str, weight: float,
                      burst_bytes: Optional[int] = None) -> None:
         """Grant/revoke link-bandwidth share at runtime, like set_quota does
         for capacity.  Weight is relative (weighted-fair), so 'revoking'
-        is lowering a weight — the link itself is never left idle."""
+        is lowering a weight — the links themselves are never left idle.
+        Applied to every expander's arbiter in the pool."""
         with self._lock:
             info = self.device(device_id)
             self._devices[device_id] = dataclasses.replace(
                 info, bw_weight=weight,
                 bw_burst_bytes=(info.bw_burst_bytes if burst_bytes is None
                                 else burst_bytes))
-            self.arbiter.register(
-                device_id, weight=weight,
-                burst_bytes=self._devices[device_id].bw_burst_bytes)
+            for arb in self._arbiters.values():
+                arb.register(
+                    device_id, weight=weight,
+                    burst_bytes=self._devices[device_id].bw_burst_bytes)
             self.journal.append(
                 JournalEntry("bw_share", device_id, detail=str(weight)))
 
-    def meter_transfer(self, device_id: str, nbytes: int) -> TransferGrant:
-        """Charge a data-path transfer against the device's link share.
+    def meter_transfer(self, device_id: str, nbytes: int,
+                       block_id: Optional[int] = None) -> TransferGrant:
+        """Charge a data-path transfer against the device's link share on
+        the expander backing ``block_id`` (first expander when unknown).
 
         Hot path (every LinkedBuffer demote/fault): deliberately not
-        journaled — aggregate occupancy lives in the arbiter snapshot."""
+        journaled — aggregate occupancy lives in the arbiter snapshots."""
         self.device(device_id)  # InvalidHandle on unknown devices
-        return self.arbiter.meter(device_id, nbytes)
+        eid = (self._block_home.get(block_id)
+               if block_id is not None else None)
+        arb = self._arbiters.get(eid) if eid is not None else None
+        if arb is None:
+            arb = self.arbiter
+        return arb.meter(device_id, nbytes)
 
-    def link_utilization(self) -> float:
-        return self.arbiter.utilization()
+    def link_utilization(self, expander_id: Optional[int] = None) -> float:
+        """One expander's EWMA link utilization, or the pool-wide max
+        (the pressure signal consumers degrade on).  Failed expanders'
+        frozen arbiters are excluded from the pool-wide view."""
+        if expander_id is not None:
+            return self._arbiters[expander_id].utilization()
+        utils = self.link_utilizations()
+        if not utils:
+            return 0.0
+        return max(utils.values())
+
+    def link_utilizations(self) -> Dict[int, float]:
+        """Per-expander EWMA link utilization (healthy expanders only)."""
+        return {e.expander_id: self._arbiters[e.expander_id].utilization()
+                for e in self._healthy_expanders()}
+
+    def least_loaded_expander(
+            self, exclude: Sequence[int] = (),
+            media: MediaKind = MediaKind.DRAM) -> Optional[int]:
+        """Migration target: the same coolest-healthy-with-room criterion
+        block placement uses.  When no expander has a whole free block,
+        falls back to the coolest healthy one anyway — migration into a
+        consumer's EXISTING free slots there needs no new block, and
+        migrate_pages stops cleanly if growth is refused.  None only when
+        the pool offers no alternative expander at all."""
+        exp = self._coolest(media, exclude)
+        if exp is None:
+            exp = self._coolest(media, exclude, require_room=False)
+        return exp.expander_id if exp is not None else None
+
+    def record_migration(self, device_id: str, src_expander: int,
+                         dst_expander: int, npages: int,
+                         nbytes: int) -> None:
+        """Journal a hot-page migration like a DCD capacity event."""
+        with self._lock:
+            self.journal.append(JournalEntry(
+                "migrate", device_id,
+                detail=(f"{src_expander}->{dst_expander} "
+                        f"pages={npages} bytes={nbytes}")))
 
     # -- access control -------------------------------------------------------
     def authorize(self, device_id: str, block_id: int, page_start: int,
@@ -258,53 +425,123 @@ class FabricManager:
             raise AccessDenied(
                 f"{device_id} may not access block {block_id} page {page}")
 
-    # -- failure handling -------------------------------------------------------
-    def _active(self) -> Expander:
-        if self._expander.failed and self._spare is not None:
-            return self._spare
-        return self._expander
-
-    def on_failover(self, cb: Callable[[], None]) -> None:
+    # -- failure handling -----------------------------------------------------
+    def on_failover(self, cb: Callable[[int], None]) -> None:
+        """Register a consumer callback invoked with the failed expander's
+        id after its blocks have been re-granted elsewhere."""
         self._failover_listeners.append(cb)
 
-    def inject_failure(self) -> None:
-        """Primary expander dies.  With a spare: re-grant every held block on
-        the spare and notify consumers (they must re-populate contents —
+    def _promote_spare(self) -> Expander:
+        """Standby joins the pool: fresh arbiter seeded with every device's
+        CURRENT bandwidth share (weights + burst replayed, like the
+        capacity re-grants) so QoS state survives failover too."""
+        spare = self._spare
+        self._spare = None
+        self._expanders[spare.expander_id] = spare
+        arb = LinkArbiter(self._link_bandwidth_Bps)
+        self._arbiters[spare.expander_id] = arb
+        self.journal.append(JournalEntry(
+            "promote", "*", detail=f"expander={spare.expander_id}"))
+        for info in self._devices.values():
+            arb.register(info.device_id, weight=info.bw_weight,
+                         burst_bytes=info.bw_burst_bytes)
+            self.journal.append(JournalEntry(
+                "bw_share", info.device_id,
+                detail=f"{info.bw_weight} (failover replay)"))
+        return spare
+
+    def inject_failure(self, expander_id: Optional[int] = None) -> None:
+        """One expander dies.  With somewhere to go (a passive spare, or
+        surviving pooled expanders): re-grant every block homed on the dead
+        expander and notify consumers (they must re-populate contents —
         data loss is the consumer's recovery problem, availability is ours).
-        Without a spare: subsequent requests raise, consumers degrade to
+        With nowhere to go: subsequent requests raise, consumers degrade to
         onboard-only mode (see LinkedBuffer.degraded)."""
         with self._lock:
-            self._expander.failed = True
-            self.journal.append(JournalEntry("fail", "*"))
-            if self._spare is None:
+            if expander_id is not None:
+                eid = expander_id
+            else:
+                # default: the first HEALTHY expander — re-failing an
+                # already-dead one would be a silent no-op
+                healthy = self._healthy_expanders()
+                eid = (healthy[0].expander_id if healthy
+                       else next(iter(self._expanders)))
+            exp = self._expanders.get(eid)
+            if exp is None:
+                raise InvalidHandle(f"unknown expander {eid}")
+            exp.failed = True
+            self.journal.append(
+                JournalEntry("fail", "*", detail=f"expander={eid}"))
+            if self._spare is not None:
+                self._promote_spare()
+            if not self._healthy_expanders():
+                # nowhere to re-grant — but consumers must still hear
+                # about the failure to enter degraded mode
+                for cb in self._failover_listeners:
+                    cb(eid)
                 return
             for host_id, grants in self._granted.items():
                 regrants = []
                 for g in grants:
-                    ng = self._spare.grant_block(host_id)
+                    if self._block_home.get(g.block_id) != eid:
+                        regrants.append(g)    # homed elsewhere: untouched
+                        continue
+                    # the old block id ceases to exist either way: stale
+                    # SAT/IOMMU authorizations for it must not outlive it
+                    self.sat.purge_block(g.block_id)
+                    self.iommu.purge_block(g.block_id)
+                    try:
+                        texp = self._pick_expander(g.media)
+                        ng = texp.grant_block(host_id, g.media)
+                    except (OutOfMemory, LMBError):
+                        self._block_home.pop(g.block_id, None)
+                        self.journal.append(
+                            JournalEntry("lost", host_id, g.block_id))
+                        continue
+                    self._block_home.pop(g.block_id, None)
+                    self._block_home[ng.block_id] = texp.expander_id
                     regrants.append(ng)
                     self.journal.append(
                         JournalEntry("regrant", host_id, ng.block_id,
-                                     detail=f"was {g.block_id}"))
+                                     detail=f"was {g.block_id} now "
+                                            f"expander={texp.expander_id}"))
                 self._granted[host_id] = regrants
         for cb in self._failover_listeners:
-            cb()
+            cb(eid)
 
     @property
     def healthy(self) -> bool:
-        return not self._expander.failed or self._spare is not None
+        return bool(self._healthy_expanders()) or self._spare is not None
 
-    # -- introspection ----------------------------------------------------------
+    # -- introspection --------------------------------------------------------
+    def placement(self) -> Dict[int, int]:
+        """blocks held per expander (the block→expander placement map)."""
+        out = {eid: 0 for eid in self._expanders}
+        for eid in self._block_home.values():
+            out[eid] = out.get(eid, 0) + 1
+        return out
+
     def snapshot(self) -> dict:
         with self._lock:
             return {
                 "hosts": dict(self._hosts),
                 "held_blocks": {h: [g.block_id for g in gs]
                                 for h, gs in self._granted.items()},
-                "free_bytes": self._active().free_bytes(),
+                "free_bytes": sum(e.free_bytes()
+                                  for e in self._healthy_expanders()),
                 "journal_len": len(self.journal),
                 "healthy": self.healthy,
                 "link": self.arbiter.snapshot(),
+                "placement": self.placement(),
+                "expanders": {
+                    eid: {
+                        "failed": e.failed,
+                        "free_bytes": e.free_bytes(),
+                        "utilization": self._arbiters[eid].utilization(),
+                        "link": self._arbiters[eid].snapshot(),
+                    }
+                    for eid, e in self._expanders.items()
+                },
             }
 
 
@@ -312,8 +549,25 @@ def make_default_fabric(pool_gib: int = 64,
                         spare: bool = False,
                         link_bandwidth_Bps: float = DEFAULT_LINK_BW_Bps,
                         ) -> Tuple[FabricManager, Expander]:
-    """One DRAM expander of ``pool_gib`` (+ optional spare), one FM."""
-    exp = Expander([(MediaKind.DRAM, pool_gib * 2**30)])
-    sp = Expander([(MediaKind.DRAM, pool_gib * 2**30)]) if spare else None
+    """One DRAM expander of ``pool_gib`` (+ optional passive spare), one FM."""
+    exp = Expander([(MediaKind.DRAM, pool_gib * 2**30)], expander_id=0)
+    sp = (Expander([(MediaKind.DRAM, pool_gib * 2**30)], expander_id=1)
+          if spare else None)
     return FabricManager(exp, spare=sp,
                          link_bandwidth_Bps=link_bandwidth_Bps), exp
+
+
+def make_multi_fabric(n_expanders: int = 2,
+                      pool_gib: int = 64,
+                      link_bandwidth_Bps: float = DEFAULT_LINK_BW_Bps,
+                      spare: bool = False,
+                      ) -> Tuple[FabricManager, List[Expander]]:
+    """Pooled fabric: ``n_expanders`` DRAM expanders of ``pool_gib`` each,
+    one FM arbitrating each expander's link independently."""
+    exps = [Expander([(MediaKind.DRAM, pool_gib * 2**30)], expander_id=i)
+            for i in range(n_expanders)]
+    sp = (Expander([(MediaKind.DRAM, pool_gib * 2**30)],
+                   expander_id=n_expanders) if spare else None)
+    fm = FabricManager(exps, spare=sp,
+                       link_bandwidth_Bps=link_bandwidth_Bps)
+    return fm, exps

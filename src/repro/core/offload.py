@@ -30,7 +30,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec, SingleDeviceSharding
+from jax.sharding import NamedSharding, SingleDeviceSharding
 
 DEVICE = "device"
 PINNED_HOST = "pinned_host"

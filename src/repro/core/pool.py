@@ -61,6 +61,12 @@ class DMP:
         return self.dpa_base <= dpa < self.dpa_base + self.nbytes
 
 
+#: block-id namespace stride per expander — keeps block ids globally unique
+#: across a pooled multi-expander fabric (an expander never hands out more
+#: than BLOCK_ID_STRIDE blocks; 2**20 blocks = 256 TiB per expander)
+BLOCK_ID_STRIDE = 1 << 20
+
+
 @dataclasses.dataclass
 class BlockGrant:
     """A 256 MB block granted by the FM to one host."""
@@ -70,6 +76,10 @@ class BlockGrant:
     dpa_base: int
     host_id: str
     nbytes: int = BLOCK_BYTES
+    #: which expander in the FM's pooled set backs this block
+    expander_id: int = 0
+    #: media of the backing DMP — a failover re-grant must match it
+    media: MediaKind = MediaKind.DRAM
 
 
 class Expander:
@@ -78,9 +88,14 @@ class Expander:
     The expander only hands out whole blocks; fine-grained allocation is the
     host allocator's job.  It also implements the HPA→DPA translation the
     paper's Fig 4 shows (identity-with-offset per grant here).
+
+    ``expander_id`` names the expander inside a pooled fabric; block ids are
+    carved from a per-expander namespace (``expander_id * BLOCK_ID_STRIDE``)
+    so grants from different expanders never collide in the FM's tables.
     """
 
-    def __init__(self, dmps: List[Tuple[MediaKind, int]]):
+    def __init__(self, dmps: List[Tuple[MediaKind, int]],
+                 expander_id: int = 0):
         base = 0
         self._dmps: List[DMP] = []
         for i, (media, nbytes) in enumerate(dmps):
@@ -95,8 +110,20 @@ class Expander:
             for d in self._dmps
         }
         self._grants: Dict[int, BlockGrant] = {}
-        self._next_block_id = 0
+        self.expander_id = expander_id
+        self._next_block_id = expander_id * BLOCK_ID_STRIDE
         self.failed = False  # failure-injection flag (see fabric.py)
+
+    def renumber(self, expander_id: int) -> None:
+        """Move this expander to another block-id namespace.  Only legal
+        before any grant — outstanding block ids would keep the old
+        namespace and collide with the FM's placement tables."""
+        if self._grants:
+            raise LMBError(
+                f"cannot renumber expander {self.expander_id}: "
+                f"{len(self._grants)} blocks outstanding")
+        self.expander_id = expander_id
+        self._next_block_id = expander_id * BLOCK_ID_STRIDE
 
     # -- capacity ----------------------------------------------------------
     @property
@@ -116,10 +143,15 @@ class Expander:
                     media: MediaKind = MediaKind.DRAM) -> BlockGrant:
         if self.failed:
             raise LMBError("expander failed")
+        if self._next_block_id >= (self.expander_id + 1) * BLOCK_ID_STRIDE:
+            raise LMBError(
+                f"expander {self.expander_id} exhausted its block-id "
+                f"namespace ({BLOCK_ID_STRIDE} grants)")
         for d in self._dmps:
             if d.media is media and self._free[d.dmp_id]:
                 dpa = self._free[d.dmp_id].pop()
-                grant = BlockGrant(self._next_block_id, d.dmp_id, dpa, host_id)
+                grant = BlockGrant(self._next_block_id, d.dmp_id, dpa, host_id,
+                                   expander_id=self.expander_id, media=media)
                 self._next_block_id += 1
                 self._grants[grant.block_id] = grant
                 return grant
@@ -226,7 +258,9 @@ class BlockAllocator:
     ``request_block`` / ``return_block`` are callbacks into the Fabric
     Manager; the allocator asks for one block at a time when it cannot
     satisfy a request (paper §3.2) and returns a block as soon as it is
-    entirely free.
+    entirely free.  ``request_block`` takes an optional expander hint so
+    placement-aware callers (hot-page migration) can direct a region onto
+    a specific expander's blocks.
     """
 
     def __init__(self, request_block, return_block,
@@ -266,16 +300,23 @@ class BlockAllocator:
             raise ValueError("allocation size must be positive")
         return -(-nbytes // self.page_bytes)
 
-    def alloc(self, owner: str, nbytes: int) -> Region:
+    def alloc(self, owner: str, nbytes: int,
+              expander_id: Optional[int] = None) -> Region:
+        """Allocate a region; ``expander_id`` restricts it to blocks backed
+        by that expander (placement hint for migration/striping)."""
         npages = self._pages_for(nbytes)
         if npages > BLOCK_BYTES // self.page_bytes:
             return self._alloc_multiblock(owner, npages)
         for bs in self._blocks.values():
+            if (expander_id is not None
+                    and bs.grant.expander_id != expander_id):
+                continue
             start = bs.find_run(npages)
             if start is not None:
                 return self._commit(owner, bs, start, npages)
         # no room: request one more block from the FM (paper §3.2)
-        grant = self._request_block()
+        grant = (self._request_block() if expander_id is None
+                 else self._request_block(expander_id))
         bs = _BlockState(grant, self.page_bytes)
         self._blocks[grant.block_id] = bs
         start = bs.find_run(npages)
@@ -320,6 +361,38 @@ class BlockAllocator:
         if r is None:
             raise InvalidHandle(f"unknown mmid {mmid}")
         return r
+
+    def expander_of(self, mmid: int) -> int:
+        """Which pooled expander backs this region's block."""
+        region = self.region(mmid)
+        return self._blocks[region.block_id].grant.expander_id
+
+    def adopt_block(self, grant: BlockGrant) -> bool:
+        """Start tracking a block the FM granted out-of-band (a blank
+        failover replacement): it joins empty and its free runs satisfy
+        future allocations, so re-granted capacity stays usable and the
+        block can eventually be returned.  No-op for known blocks."""
+        if grant.block_id in self._blocks:
+            return False
+        self._blocks[grant.block_id] = _BlockState(grant, self.page_bytes)
+        return True
+
+    def drop_expander(self, expander_id: int) -> List[int]:
+        """Forget every block (and the regions inside) backed by a failed
+        expander.  Called on failover: the FM already re-granted or lost
+        those blocks, so nothing is returned to it — without this, the
+        dead blocks' free runs would keep satisfying new allocations and
+        silently place fresh regions on the failed expander.  Returns the
+        dropped mmids."""
+        dead = {bid for bid, bs in self._blocks.items()
+                if bs.grant.expander_id == expander_id}
+        for bid in dead:
+            del self._blocks[bid]
+        dropped = [mmid for mmid, r in self._regions.items()
+                   if r.block_id in dead]
+        for mmid in dropped:
+            del self._regions[mmid]
+        return dropped
 
     def iter_regions(self) -> Iterator[Region]:
         return iter(self._regions.values())

@@ -11,7 +11,6 @@ import functools
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import paged_attention as _pa

@@ -25,7 +25,7 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -73,7 +73,6 @@ def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, flags: Flags):
     params_shapes = model.abstract_params()
     p_shard = param_shardings(params_shapes, mesh, cfg, fsdp=fsdp)
     B, S = shape.global_batch, shape.seq_len
-    repl = NamedSharding(mesh, P())
 
     if shape.kind == "train":
         params_shapes, opt_shapes = abstract_train_state(model)

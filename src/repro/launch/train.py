@@ -11,13 +11,11 @@ on a pod the same script runs the full config over the production mesh.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import get_config
 from repro.core import LMBHost, make_default_fabric

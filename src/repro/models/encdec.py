@@ -8,7 +8,7 @@ output (K/V precomputed once at prefill and stored [L, B, S_src, KV, hd]).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,7 @@ from repro.models import attention as attn
 from repro.models.flags import Flags
 from repro.models.layers import Params, rms_norm
 from repro.models.scan_utils import scan_layers
-from repro.models.transformer import (_ffn, init_cache, layer_init,
+from repro.models.transformer import (_ffn, init_cache,
                                       stacked_layers_init, trunk_train)
 
 

@@ -17,7 +17,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import Params, dense_init, dtype_of
+from repro.models.layers import Params, dtype_of
 
 
 def moe_init(rng, cfg) -> Params:

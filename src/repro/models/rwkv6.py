@@ -197,7 +197,6 @@ def time_mix(p: Params, cfg, x: jax.Array, prev_x: jax.Array,
     """
     B, S, D = x.shape
     N = cfg.rwkv_head_dim
-    H = D // N
     r, k, v, g, w = _rkvwg(p, cfg, x, prev_x,
                            fuse=getattr(flags, "fuse_rwkv_proj", False))
     u = p["bonus_u"]

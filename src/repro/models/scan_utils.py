@@ -10,7 +10,7 @@ Semantics are identical; tests assert bit-equality.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

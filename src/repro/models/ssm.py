@@ -142,7 +142,6 @@ def ssm_apply(p: Params, cfg, x: jax.Array, conv_state: jax.Array,
     d_in = cfg.ssm_expand * D
     H = cfg.ssm_heads or max(1, d_in // 64)
     P = d_in // H
-    N = cfg.ssm_state
 
     xz = dense(p["in_proj"], x)
     xc, z = jnp.split(xz, 2, axis=-1)

@@ -15,22 +15,19 @@ Production choices:
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import DENSE, HYBRID, MOE, RWKV6, ArchConfig
+from repro.configs.base import HYBRID, MOE, RWKV6, ArchConfig
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import rwkv6 as rwkv_mod
 from repro.models import ssm as ssm_mod
-from repro.models.flags import Flags, DEFAULT_FLAGS
-from repro.models.layers import (Params, chunked_softmax_xent, dtype_of,
-                                 embed_init, embed_logits, embed_lookup,
-                                 mlp_apply, mlp_init, rms_norm, rms_norm_init)
+from repro.models.flags import Flags
+from repro.models.layers import (Params, dtype_of, mlp_apply, mlp_init,
+                                 rms_norm, rms_norm_init)
 from repro.models.scan_utils import scan_layers
 from repro.sharding.constraints import constrain
 

@@ -9,13 +9,12 @@ input of the step that shape cell lowers (the dry-run contract).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import (DENSE, HYBRID, MOE, RWKV6, ArchConfig,
-                                ShapeConfig, SHAPES)
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
 from repro.models import encdec as encdec_mod
 from repro.models.flags import Flags, DEFAULT_FLAGS
 from repro.models.layers import (chunked_softmax_xent, dtype_of, embed_init,

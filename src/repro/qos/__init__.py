@@ -8,6 +8,8 @@ makes the CXL link a contended, arbitrated resource.  Three layers:
   contention — effective tier latency as a function of link utilization
                (replaces the fixed added_latency_s on hot paths)
   slo        — per-tenant SLO tracking + admit/throttle/shed control
+  migration  — hot-page migration between pooled expanders (saturation-
+               triggered, heat-ranked, journaled like DCD events)
 
 Wired through: FabricManager owns a LinkArbiter next to its capacity
 quotas, LinkedBuffer meters paging traffic through it, the Fig-6
@@ -22,6 +24,8 @@ from repro.qos.arbiter import (LinkArbiter, TenantState, TransferGrant,
                                weighted_max_min)
 from repro.qos.contention import (ContendedTierSpec, LinkState,
                                   contended_tiers)
+from repro.qos.migration import (MigrationEngine, MigrationPolicy,
+                                 MigrationReport, plan_rebalance)
 from repro.qos.slo import (AdmissionController, Decision, SLOTarget,
                            TenantSLO)
 
@@ -29,5 +33,6 @@ __all__ = [
     "LinkArbiter", "TenantState", "TransferGrant", "UnknownTenant",
     "jain_fairness", "weighted_max_min", "ContendedTierSpec", "LinkState",
     "contended_tiers", "AdmissionController", "Decision", "SLOTarget",
-    "TenantSLO",
+    "TenantSLO", "MigrationEngine", "MigrationPolicy", "MigrationReport",
+    "plan_rebalance",
 ]

@@ -30,7 +30,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import LMBHost
-from repro.core.tiers import TierKind, tpu_tiers
 from repro.models.zoo import Model
 from repro.qos.slo import AdmissionController, Decision
 from repro.serve.kv_cache import PagedKVStore
@@ -229,6 +228,7 @@ class ServeEngine:
         done = [r for r in self.requests.values() if r.state == "done"]
         ttft = [r.first_token_at - r.submitted_at for r in done
                 if r.first_token_at]
+        fm = self.kv.buf.host.fm
         return {
             "done": len(done),
             "waiting": len(self.waiting),
@@ -237,4 +237,12 @@ class ServeEngine:
             "mean_ttft_s": float(np.mean(ttft)) if ttft else None,
             "kv": self.kv.stats(),
             "qos": self.qos.snapshot() if self.qos else None,
+            # pooled-fabric placement: which expander backs the engine's KV
+            # blocks/pages and how loaded each expander's link runs — the
+            # signals the MigrationEngine acts on
+            "fabric": {
+                "block_placement": fm.placement(),
+                "kv_page_placement": self.kv.buf.lmb_placement(),
+                "link_utilization": fm.link_utilizations(),
+            },
         }

@@ -19,8 +19,7 @@ one DMA per page move, layer-major so a layer-by-layer decode can stream.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,7 @@ falls back to replication (e.g. hymba's 25 heads, qwen2's 12) — recorded by
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Tuple
 
 import jax
 import numpy as np

@@ -1,11 +1,13 @@
 """repro.sim — discrete-event reproduction of the paper's §4 evaluation."""
 
-from repro.sim.engine import (SharedFabricResult, SimResult, simulate,
+from repro.sim.engine import (MultiExpanderResult, SharedFabricResult,
+                              SimResult, simulate, simulate_multi_expander,
                               simulate_shared_fabric)
 from repro.sim.ssd import (GEN4_SSD, GEN5_SSD, Scheme, SSDSpec,
                            make_ssd_model)
 from repro.sim.workload import Workload, make_workload
 
-__all__ = ["SharedFabricResult", "SimResult", "simulate",
-           "simulate_shared_fabric", "GEN4_SSD", "GEN5_SSD", "Scheme",
-           "SSDSpec", "make_ssd_model", "Workload", "make_workload"]
+__all__ = ["MultiExpanderResult", "SharedFabricResult", "SimResult",
+           "simulate", "simulate_multi_expander", "simulate_shared_fabric",
+           "GEN4_SSD", "GEN5_SSD", "Scheme", "SSDSpec", "make_ssd_model",
+           "Workload", "make_workload"]

@@ -24,7 +24,7 @@ import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import ml_dtypes
+import ml_dtypes  # noqa: F401 - registers bfloat16 & friends with numpy
 import numpy as np
 
 #: numpy can't serialize ml_dtypes (bfloat16 etc.); store a same-width

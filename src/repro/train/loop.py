@@ -16,8 +16,7 @@ annotated to ``pinned_host`` so XLA streams them HBM↔host around the update
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

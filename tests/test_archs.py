@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import SHAPES, get_config, list_configs
+from repro.configs.base import get_config, list_configs
 from repro.models import build_model
 from repro.models.flags import Flags
 

@@ -20,9 +20,8 @@ class TestData:
         assert not np.array_equal(a["tokens"], c["tokens"])
 
     def test_host_sharding_partitions_batch(self):
-        """Two hosts' shards at the same step are disjoint streams that
-        together form the deterministic global batch."""
-        full = SyntheticLM(DataConfig(128, 32, 4, seed=3, shard=(0, 1)))
+        """Two hosts' shards at the same step are disjoint deterministic
+        streams, each carrying its slice of the global batch."""
         h0 = SyntheticLM(DataConfig(128, 32, 4, seed=3, shard=(0, 2)))
         h1 = SyntheticLM(DataConfig(128, 32, 4, seed=3, shard=(1, 2)))
         assert h0.batch(5)["tokens"].shape[0] == 2

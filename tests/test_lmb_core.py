@@ -3,8 +3,8 @@
 import pytest
 
 from repro.core import (BLOCK_BYTES, AccessDenied, DeviceClass, DeviceInfo,
-                        Expander, FabricManager, InvalidHandle, LMBError,
-                        LMBHost, MediaKind, OutOfMemory, make_default_fabric)
+                        Expander, InvalidHandle, LMBError, LMBHost,
+                        MediaKind, OutOfMemory, make_default_fabric)
 
 
 def make_host(pool_gib=1, page_bytes=4096, spare=False):

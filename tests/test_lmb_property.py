@@ -83,7 +83,7 @@ def test_linked_buffer_read_what_you_wrote(data):
                        onboard_pages=n_onboard, policy=policy,
                        lmb_chunk_pages=4, metrics=Metrics())
     n_pages = data.draw(st.integers(1, 20))
-    pages = buf.append_pages(n_pages)
+    buf.append_pages(n_pages)
     shadow = {}
     ops = data.draw(st.lists(
         st.tuples(st.sampled_from(["write", "read", "share_release"]),

@@ -1,0 +1,421 @@
+"""Multi-expander pooling + hot-page migration (ISSUE 2).
+
+Pins the migration invariants: migrated pages keep their contents
+(read-back equality), access-control entries move with the pages
+(IOMMU/SAT revoked on the source block, granted on the destination),
+and link metering is conserved (a migration charges exactly one page
+read on the source link and one page write on the destination link).
+Plus: the failover re-grant path replays bandwidth shares onto the
+standby's arbiter, and the pooled-fabric simulator shows p99 recovery.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LMBHost, LinkedBuffer, make_default_fabric,
+                        make_multi_fabric)
+from repro.core.fabric import DeviceClass, DeviceInfo
+from repro.core.pool import BLOCK_ID_STRIDE
+from repro.qos import MigrationEngine, MigrationPolicy, plan_rebalance
+
+
+def make_pooled(n_expanders=2, pool_gib=1, page_bytes=1 << 16):
+    fm, exps = make_multi_fabric(n_expanders=n_expanders, pool_gib=pool_gib)
+    fm.bind_host("h0")
+    fm.register_device(DeviceInfo("d0", DeviceClass.PCIE))
+    host = LMBHost(fm, "h0", page_bytes=page_bytes)
+    return fm, host
+
+
+def make_buffer(host, n_pages=12, onboard=2, chunk=4, **kw):
+    buf = LinkedBuffer(name="mig", device_id="d0", host=host,
+                       page_shape=(8, 8), dtype=jnp.float32,
+                       onboard_pages=onboard, lmb_chunk_pages=chunk, **kw)
+    pages = buf.append_pages(n_pages)
+    for i, p in enumerate(pages):
+        buf.write(p, jnp.full((8, 8), float(i + 1)))
+    return buf, pages
+
+
+# ------------------------------------------------------------- placement
+def test_pooled_block_ids_never_collide():
+    fm, host = make_pooled(n_expanders=3)
+    blocks = []
+    for eid in range(3):
+        a = host.lmb_pcie_alloc("d0", 4096, expander_id=eid)
+        assert host.expander_of(a.mmid) == eid
+        blocks.append(host.allocator.region(a.mmid).block_id)
+    assert len(set(blocks)) == 3
+    for eid, bid in enumerate(blocks):
+        assert bid // BLOCK_ID_STRIDE == eid
+        assert fm.expander_of(bid) == eid
+    assert sum(fm.placement().values()) == 3
+
+
+def test_placement_prefers_least_loaded_link():
+    fm, host = make_pooled(n_expanders=2)
+    # heat up expander 0's link, then let an unhinted block grant pick
+    # (sub-block allocs reuse granted blocks; placement is per block)
+    a0 = host.lmb_pcie_alloc("d0", 4096, expander_id=0)
+    for _ in range(50):
+        host.meter_transfer("d0", 1 << 20, mmid=a0.mmid)
+    grant = fm.request_block("h0")
+    assert grant.expander_id == 1
+    assert fm.expander_of(grant.block_id) == 1
+
+
+# ------------------------------------------------- migration invariants
+def test_migration_preserves_contents():
+    fm, host = make_pooled()
+    buf, pages = make_buffer(host)
+    lmb_pages = [p for p in pages if buf.page_expander(p) is not None]
+    assert lmb_pages, "working set never spilled"
+    src = buf.page_expander(lmb_pages[0])
+    dst = 1 - src
+    expected = {p: float(p + 1) for p in lmb_pages}
+    moved = buf.migrate_pages(lmb_pages, dst)
+    assert moved == len(lmb_pages)
+    buf.check_invariants()
+    for p in lmb_pages:
+        assert buf.page_expander(p) == dst
+        np.testing.assert_array_equal(
+            np.asarray(buf.read(p)), np.full((8, 8), expected[p]))
+
+
+def test_migration_regrants_iommu_entries():
+    fm, host = make_pooled()
+    buf, pages = make_buffer(host, n_pages=6, onboard=2, chunk=4)
+    lmb_pages = [p for p in pages if buf.page_expander(p) is not None]
+    src_blocks = [b for b in fm.snapshot()["held_blocks"]["h0"]
+                  if fm.expander_of(b) == 0]
+    assert src_blocks and all(
+        fm.iommu.check("d0", b, 0) for b in src_blocks)
+    moved = buf.migrate_pages(lmb_pages, 1)
+    assert moved == len(lmb_pages)
+    # source chunks emptied -> allocation freed -> IOMMU revoked on the
+    # source block (and, fully drained, the block returned to the FM)
+    for b in src_blocks:
+        assert not fm.iommu.check("d0", b, 0)
+    dst_blocks = [b for b in fm.snapshot()["held_blocks"]["h0"]
+                  if fm.expander_of(b) == 1]
+    assert dst_blocks and all(
+        fm.iommu.check("d0", b, 0) for b in dst_blocks)
+    assert fm.placement()[0] == 0 and fm.placement()[1] >= 1
+
+
+def test_migration_conserves_metered_bytes():
+    fm, host = make_pooled()
+    buf, pages = make_buffer(host)
+    lmb_pages = [p for p in pages if buf.page_expander(p) is not None]
+
+    def metered(eid):
+        link = fm.snapshot()["expanders"][eid]["link"]
+        return link["tenants"]["d0"]["bytes_total"]
+
+    before = {eid: metered(eid) for eid in (0, 1)}
+    moved = buf.migrate_pages(lmb_pages, 1)
+    after = {eid: metered(eid) for eid in (0, 1)}
+    page_b = buf.lmb_page_bytes
+    # one page-read charged to the source link per move ...
+    assert after[0] - before[0] == moved * page_b
+    # ... one page-write charged to the destination link per move
+    assert after[1] - before[1] == moved * page_b
+    # and nothing else: total metered delta is exactly 2x payload
+    total = sum(after.values()) - sum(before.values())
+    assert total == 2 * moved * page_b
+
+
+def test_migration_stops_cleanly_when_target_full():
+    """Destination quota exhaustion mid-batch must not corrupt pages:
+    the batch stops early and every unmoved page keeps its contents
+    (regression: compressed pages lost their scale on a failed move)."""
+    from repro.core.pool import BLOCK_BYTES
+    fm, host = make_pooled()
+    buf = LinkedBuffer(name="mig", device_id="d0", host=host,
+                       page_shape=(8, 8), dtype=jnp.float32,
+                       onboard_pages=2, lmb_chunk_pages=4,
+                       compress_lmb=True)
+    pages = buf.append_pages(12)
+    for i, p in enumerate(pages):
+        buf.write(p, jnp.full((8, 8), float(i + 1)))
+    # quota now exactly covers what's held: any new block is refused
+    fm.set_quota("h0", fm.held_bytes("h0"))
+    assert fm.held_bytes("h0") < 2 * BLOCK_BYTES
+    lmb_pages = [p for p in pages if buf.page_expander(p) is not None]
+    moved = buf.migrate_pages(lmb_pages, 1)
+    assert moved == 0                      # nothing could move...
+    buf.check_invariants()
+    for i, p in enumerate(pages):          # ...and nothing was corrupted
+        np.testing.assert_allclose(
+            np.asarray(buf.read(p)), np.full((8, 8), float(i + 1)),
+            rtol=2e-2)
+    eng = MigrationEngine(fm)              # engine survives the same case
+    eng.register(buf)
+    rep = eng.run_once()
+    assert rep.pages_moved == 0
+
+
+def test_last_expander_failure_degrades_and_invalidates():
+    """Losing the final healthy expander must still notify consumers:
+    the buffer enters degraded mode and sheds the dead pages
+    (regression: the no-target early-return skipped the callbacks)."""
+    fm, host = make_pooled()
+    buf, pages = make_buffer(host)
+    lmb_pages = [p for p in pages if buf.page_expander(p) is not None]
+    half = lmb_pages[: len(lmb_pages) // 2]
+    buf.migrate_pages(half, 1)
+    fm.inject_failure(expander_id=0)
+    assert fm.healthy and not buf.degraded
+    fm.inject_failure(expander_id=1)
+    assert not fm.healthy
+    assert buf.degraded
+    for p in lmb_pages:                    # every LMB page was shed
+        assert buf.page_expander(p) is None
+    buf.check_invariants()
+    # dead capacity is not allocatable: raw Table-2 allocs refuse too
+    with pytest.raises(Exception):
+        host.lmb_pcie_alloc("d0", 4096)
+
+
+def test_failover_purges_stale_access_entries():
+    """Re-granting a dead expander's blocks must revoke the old block
+    ids' SAT/IOMMU authorizations — access control may not keep vouching
+    for blocks that no longer exist (regression)."""
+    fm, host = make_pooled()
+    buf, _ = make_buffer(host)
+    dead_blocks = [b for b in fm.snapshot()["held_blocks"]["h0"]
+                   if fm.expander_of(b) == 0]
+    assert dead_blocks and all(
+        fm.iommu.check("d0", b, 0) for b in dead_blocks)
+    fm.inject_failure(expander_id=0)
+    for b in dead_blocks:
+        assert not fm.iommu.check("d0", b, 0)
+
+
+def test_parameterless_failure_targets_a_healthy_expander():
+    """Cascading inject_failure() calls must fail a LIVE expander each
+    time, not re-fail the first (dead) one (regression)."""
+    fm, _ = make_pooled()
+    fm.inject_failure()
+    assert fm.healthy
+    fm.inject_failure()                    # must pick the survivor
+    assert not fm.healthy
+    fails = [j.detail for j in fm.journal if j.op == "fail"]
+    assert fails == ["expander=0", "expander=1"]
+
+
+def test_engine_rejects_foreign_buffer():
+    fm_a, _ = make_pooled()
+    fm_b, host_b = make_pooled()
+    buf_b, _ = make_buffer(host_b)
+    eng = MigrationEngine(fm_a)
+    with pytest.raises(ValueError):
+        eng.register(buf_b)
+
+
+def test_migration_is_idempotent_toward_target():
+    fm, host = make_pooled()
+    buf, pages = make_buffer(host)
+    lmb_pages = [p for p in pages if buf.page_expander(p) is not None]
+    assert buf.migrate_pages(lmb_pages, 1) == len(lmb_pages)
+    # already home: second call is a no-op, nothing metered twice
+    assert buf.migrate_pages(lmb_pages, 1) == 0
+    buf.check_invariants()
+
+
+def test_heat_ranks_hotter_pages_higher():
+    fm, host = make_pooled()
+    buf, pages = make_buffer(host, n_pages=8, onboard=2)
+    lmb_pages = [p for p in pages if buf.page_expander(p) is not None]
+    hot, cold = lmb_pages[0], lmb_pages[-1]
+    for _ in range(5):
+        buf.read(hot)          # faults in + demotes others: link touches
+    assert buf.page_heat(hot) > buf.page_heat(cold)
+    ranked = buf.hottest_pages(4, expander_id=0)
+    assert cold not in ranked[:1]
+
+
+# ------------------------------------------------------ MigrationEngine
+def test_engine_noop_below_threshold():
+    fm, host = make_pooled()
+    buf, _ = make_buffer(host, n_pages=4, onboard=4)  # all onboard: idle
+    eng = MigrationEngine(fm)
+    eng.register(buf)
+    rep = eng.run_once()
+    assert not rep.triggered and rep.pages_moved == 0
+    assert "threshold" in rep.reason
+
+
+def test_engine_migrates_hot_pages_off_saturated_link():
+    fm, host = make_pooled()
+    buf, pages = make_buffer(host)
+    for _ in range(3):
+        for p in pages:
+            buf.read(p)                      # thrash expander 0's link
+    assert fm.link_utilizations()[0] > 0.7
+    eng = MigrationEngine(fm, MigrationPolicy(max_pages_per_round=4))
+    eng.register(buf)
+    rep = eng.run_once()
+    assert rep.triggered
+    assert rep.src_expander == 0 and rep.dst_expander == 1
+    assert rep.pages_moved == 4
+    assert rep.bytes_moved == 4 * buf.lmb_page_bytes
+    assert buf.lmb_placement().get(1, 0) == 4
+    assert any(j.op == "migrate" for j in fm.journal)
+    assert eng.stats()["pages_moved"] == 4
+    buf.check_invariants()
+
+
+# ------------------------------------------------ failover (satellite)
+def test_failover_replays_bw_shares_onto_standby():
+    fm, _ = make_default_fabric(pool_gib=1, spare=True)
+    fm.bind_host("h0")
+    fm.register_device(DeviceInfo("d0", DeviceClass.PCIE))
+    fm.register_device(DeviceInfo("d1", DeviceClass.PCIE))
+    fm.set_bw_share("d0", 3.0, burst_bytes=1 << 20)
+    host = LMBHost(fm, "h0", page_bytes=4096)
+    host.lmb_pcie_alloc("d0", 4096)
+    fm.inject_failure()
+    assert fm.healthy
+    spare = fm.snapshot()["expanders"][1]["link"]["tenants"]
+    assert spare["d0"]["weight"] == 3.0       # share survived failover
+    assert spare["d1"]["weight"] == 1.0
+    replays = [j for j in fm.journal
+               if j.op == "bw_share" and "replay" in j.detail]
+    assert len(replays) == 2
+    # post-failover traffic lands on the standby's arbiter
+    fm.meter_transfer("d0", 4096,
+                      block_id=fm.snapshot()["held_blocks"]["h0"][0])
+    spare = fm.snapshot()["expanders"][1]["link"]["tenants"]
+    assert spare["d0"]["bytes_total"] == 4096
+
+
+def test_new_allocations_avoid_failed_expander():
+    """After a partial failure, fresh LinkedBuffer growth must land on a
+    healthy expander (regression: the host allocator kept free runs in
+    the dead expander's blocks and placed new regions there)."""
+    fm, host = make_pooled()
+    buf, pages = make_buffer(host)          # all chunks homed on 0
+    assert set(buf.lmb_placement()) == {0}
+    fm.inject_failure(expander_id=0)
+    new = buf.append_pages(8)
+    for p in new:
+        buf.write(p, jnp.full((8, 8), 7.0))
+    assert set(buf.lmb_placement()) == {1}  # only the survivor
+    buf.check_invariants()
+    # and the survivor's arbiter saw the traffic
+    link1 = fm.snapshot()["expanders"][1]["link"]["tenants"]["d0"]
+    assert link1["bytes_total"] > 0
+
+
+def test_meter_fallback_prefers_healthy_expander():
+    """Unattributed transfers must not vanish into a dead expander's
+    frozen arbiter after failover (regression)."""
+    fm, _ = make_default_fabric(pool_gib=1, spare=True)
+    fm.register_device(DeviceInfo("d0", DeviceClass.PCIE))
+    fm.inject_failure()
+    fm.meter_transfer("d0", 4096)           # no block attribution
+    snap = fm.snapshot()
+    assert snap["expanders"][1]["link"]["tenants"]["d0"][
+        "bytes_total"] == 4096
+    assert snap["link"]["tenants"]["d0"]["bytes_total"] == 4096
+
+
+def test_failover_regrants_stay_usable_within_quota():
+    """The blank replacement blocks the FM re-grants on failover must be
+    adoptable by the host allocator: held capacity stays allocatable and
+    the quota charge doesn't turn into a permanent leak (regression)."""
+    fm, host = make_pooled()
+    buf, pages = make_buffer(host)
+    held = fm.held_bytes("h0")
+    fm.set_quota("h0", held)               # no headroom for NEW blocks
+    fm.inject_failure(expander_id=0)
+    assert fm.held_bytes("h0") == held     # replacements, not leaks
+    new = buf.append_pages(8)
+    for p in new:                          # regrow INSIDE the re-grant
+        buf.write(p, jnp.full((8, 8), 9.0))
+    assert set(buf.lmb_placement()) == {1}
+    assert fm.held_bytes("h0") == held
+    buf.check_invariants()
+
+
+def test_partial_failure_only_invalidates_dead_expander_pages():
+    fm, host = make_pooled()
+    buf, pages = make_buffer(host)
+    lmb_pages = [p for p in pages if buf.page_expander(p) is not None]
+    half = lmb_pages[: len(lmb_pages) // 2]
+    buf.migrate_pages(half, 1)
+    fm.inject_failure(expander_id=0)
+    assert fm.healthy                          # pool survives
+    buf.check_invariants()
+    for p in half:                             # survivors keep contents
+        assert buf.page_expander(p) == 1
+        np.testing.assert_array_equal(
+            np.asarray(buf.read(p)), np.full((8, 8), float(p + 1)))
+    for p in lmb_pages[len(half):]:            # victims zero-filled
+        assert buf.page_expander(p) in (None, 1)
+
+
+# ------------------------------------------------------- planning + sim
+def test_plan_rebalance_never_raises_max_load():
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        n_dev = int(rng.integers(1, 12))
+        n_exp = int(rng.integers(1, 4))
+        demands = rng.uniform(1e9, 12e9, n_dev).tolist()
+        placement = rng.integers(0, n_exp, n_dev).tolist()
+        cap = 30e9
+
+        def max_load(place):
+            loads = [0.0] * n_exp
+            for d, e in enumerate(place):
+                loads[e] += demands[d]
+            return max(loads)
+
+        out = plan_rebalance(demands, placement, n_exp, cap)
+        assert len(out) == len(placement)
+        assert max_load(out) <= max_load(placement) + 1e-6
+
+
+def test_plan_rebalance_splits_hot_expander():
+    out = plan_rebalance([10e9] * 8, [0] * 8, 2, 30e9,
+                         saturation_threshold=0.7)
+    assert sorted((out.count(0), out.count(1))) == [4, 4]
+
+
+def test_simulate_multi_expander_p99_recovers():
+    from repro.sim import (make_ssd_model, make_workload,
+                           simulate_multi_expander)
+    from repro.sim.ssd import make_schemes
+    spec = make_ssd_model(5)
+    scheme = make_schemes(spec)["lmb-cxl"]
+    wl = make_workload("randread", n_ios=6_000)
+    r = simulate_multi_expander(spec, scheme, wl, 8, n_expanders=2)
+    assert r.utilization_before[0] == pytest.approx(1.0)
+    assert r.utilization_before[1] == 0.0
+    assert max(r.utilization_after) < 1.0      # load actually split
+    assert r.migrated_devices > 0 and r.migrated_bytes > 0
+    assert r.hot_p99_after_us < r.hot_p99_before_us
+    # recovery toward the uncontended baseline (acceptance criterion)
+    assert r.recovery_fraction > 0.5
+    gap_after = r.hot_p99_after_us - r.baseline_p99_us
+    gap_before = r.hot_p99_before_us - r.baseline_p99_us
+    assert gap_after < 0.5 * gap_before
+
+
+def test_simulate_multi_expander_finds_hot_link_anywhere():
+    """The hot expander is measured, not assumed to be expander 0
+    (regression: placement=[1]*N reported recovery for an idle link)."""
+    from repro.sim import (make_ssd_model, make_workload,
+                           simulate_multi_expander)
+    from repro.sim.ssd import make_schemes
+    spec = make_ssd_model(5)
+    scheme = make_schemes(spec)["lmb-cxl"]
+    wl = make_workload("randread", n_ios=6_000)
+    r = simulate_multi_expander(spec, scheme, wl, 8, n_expanders=2,
+                                placement=[1] * 8)
+    assert r.utilization_before[1] == pytest.approx(1.0)
+    assert r.hot_p99_before_us > r.baseline_p99_us
+    assert r.hot_p99_after_us < r.hot_p99_before_us
+    assert r.recovery_fraction > 0.5

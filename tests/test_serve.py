@@ -48,6 +48,12 @@ def test_requests_complete(served):
     eng.run(200)
     assert all(eng.requests[r].state == "done" for r in rids)
     assert all(len(eng.requests[r].out_tokens) == 4 for r in rids)
+    # pooled-fabric placement surfaces in the engine snapshot
+    fab = eng.stats()["fabric"]
+    assert set(fab) == {"block_placement", "kv_page_placement",
+                        "link_utilization"}
+    assert 0 in fab["block_placement"]         # every pool expander listed
+    assert all(0.0 <= u <= 1.0 for u in fab["link_utilization"].values())
 
 
 def test_deterministic_outputs_vs_direct_decode(served):

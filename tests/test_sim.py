@@ -4,7 +4,6 @@ import pytest
 
 from repro.sim import make_ssd_model, make_workload, simulate
 from repro.sim.ssd import Scheme, make_schemes
-from repro.core.tiers import LMB_CXL_ADDED_S
 
 N_IOS = 30_000
 
