@@ -126,25 +126,22 @@ def bench_migration_sweep() -> None:
     # live end-to-end: LinkedBuffer thrash saturates expander 0's link,
     # the MigrationEngine moves the hottest pages to expander 1
     import jax.numpy as jnp
-    from repro.core import LMBHost, LinkedBuffer, make_multi_fabric
-    from repro.core.fabric import DeviceClass, DeviceInfo
+    from repro.core import system_for
     from repro.core.metrics import Metrics
     from repro.qos import MigrationEngine, MigrationPolicy
-    fm, _ = make_multi_fabric(n_expanders=2, pool_gib=1)
-    fm.bind_host("h0")
-    fm.register_device(DeviceInfo("d0", DeviceClass.PCIE))
-    host = LMBHost(fm, "h0", page_bytes=1 << 16, metrics=Metrics())
-    buf = LinkedBuffer(name="mig", device_id="d0", host=host,
-                       page_shape=(128, 128), dtype=jnp.float32,
-                       onboard_pages=4, lmb_chunk_pages=8,
-                       metrics=Metrics())
+    system = system_for("d0", host_id="h0", n_expanders=2, pool_gib=1,
+                        page_bytes=1 << 16, metrics=Metrics())
+    buf = system.buffer(name="mig", device_id="d0",
+                        page_shape=(128, 128), dtype=jnp.float32,
+                        onboard_pages=4, lmb_chunk_pages=8,
+                        metrics=Metrics())
     pages = buf.append_pages(32)
     for p in pages:
         buf.write(p, jnp.ones((128, 128)))
     for _ in range(2):
         for p in pages:
             buf.read(p)                      # thrash: all traffic on exp 0
-    eng = MigrationEngine(fm, MigrationPolicy(max_pages_per_round=16))
+    eng = MigrationEngine(system, MigrationPolicy(max_pages_per_round=16))
     eng.register(buf)
     t0 = time.perf_counter()
     rep = eng.run_once()
@@ -176,32 +173,30 @@ def bench_locality_sweep() -> None:
 
 # ------------------------------------------------------ allocator (§3.2)
 def bench_allocator() -> None:
-    """alloc/free/share microbench on the Table-2 API."""
-    from repro.core import LMBHost, make_default_fabric
-    from repro.core.fabric import DeviceClass, DeviceInfo
-    fm, _ = make_default_fabric(pool_gib=8)
-    fm.bind_host("h0")
-    fm.register_device(DeviceInfo("d0", DeviceClass.PCIE))
-    fm.register_device(DeviceInfo("d1", DeviceClass.PCIE))
-    host = LMBHost(fm, "h0", page_bytes=4096)
+    """alloc/free/share microbench on the capability client API."""
+    from repro.core import (DeviceSpec, HostSpec, LMBSystem, SystemSpec)
+    spec = SystemSpec(expanders=1, pool_gib=8,
+                      hosts=(HostSpec("h0", page_bytes=4096),),
+                      devices=(DeviceSpec("d0"), DeviceSpec("d1")))
+    system = LMBSystem(spec)
     N = 2000
     rng = np.random.default_rng(0)
     sizes = rng.integers(1, 1 << 20, N)
     t0 = time.perf_counter()
-    allocs = [host.lmb_pcie_alloc("d0", int(s)) for s in sizes]
+    handles = [system.alloc("d0", int(s)) for s in sizes]
     t_alloc = (time.perf_counter() - t0) / N * 1e6
     t0 = time.perf_counter()
-    for a in allocs[:500]:
-        host.lmb_pcie_share("d0", a.mmid, "d1")
+    for h in handles[:500]:
+        h.share("d1")
     t_share = (time.perf_counter() - t0) / 500 * 1e6
     t0 = time.perf_counter()
-    for a in allocs:
-        host.lmb_pcie_free("d0", a.mmid)
+    for h in handles:
+        h.free()
     t_free = (time.perf_counter() - t0) / N * 1e6
     _row("allocator.alloc", t_alloc, f"n={N}")
     _row("allocator.share", t_share, "n=500")
     _row("allocator.free", t_free,
-         f"blocks_left={host.allocator.block_count}")
+         f"blocks_left={system.host().allocator.block_count}")
 
 
 # --------------------------------------- offload overlap (TPU adaptation)
@@ -209,8 +204,7 @@ def bench_offload_overlap() -> None:
     """Bytes the LMB tier can page per step hidden behind compute (tier
     model), plus measured LinkedBuffer fault cost on this host."""
     import jax.numpy as jnp
-    from repro.core import LMBHost, LinkedBuffer, make_default_fabric
-    from repro.core.fabric import DeviceClass, DeviceInfo
+    from repro.core import system_for
     from repro.core.metrics import Metrics
     from repro.core.tiers import TierKind, hideable_page_bytes, tpu_tiers
     host_tier = tpu_tiers()[TierKind.HOST_DRAM]
@@ -218,13 +212,11 @@ def bench_offload_overlap() -> None:
         b = hideable_page_bytes(step_ms / 1e3, host_tier, streams=2)
         _row(f"offload.hideable.step{int(step_ms)}ms", 0.0,
              f"MiB={b/2**20:.0f}")
-    fm, _ = make_default_fabric(pool_gib=2)
-    fm.bind_host("h0")
-    fm.register_device(DeviceInfo("d0", DeviceClass.PCIE))
-    host = LMBHost(fm, "h0", page_bytes=1 << 16, metrics=Metrics())
-    buf = LinkedBuffer(name="bench", device_id="d0", host=host,
-                       page_shape=(256, 256), dtype=jnp.float32,
-                       onboard_pages=4, metrics=Metrics())
+    system = system_for("d0", host_id="h0", pool_gib=2,
+                        page_bytes=1 << 16, metrics=Metrics())
+    buf = system.buffer(name="bench", device_id="d0",
+                        page_shape=(256, 256), dtype=jnp.float32,
+                        onboard_pages=4, metrics=Metrics())
     pages = buf.append_pages(16)
     for p in pages:
         buf.write(p, jnp.ones((256, 256)))
@@ -260,19 +252,15 @@ def bench_serving() -> None:
     """Engine throughput on the reduced model (CPU demo scale)."""
     import jax
     from repro.configs.base import get_config
-    from repro.core import LMBHost, make_default_fabric
-    from repro.core.fabric import DeviceClass, DeviceInfo
+    from repro.core import system_for
     from repro.models import build_model
     from repro.models.flags import Flags
     from repro.serve import EngineConfig, ServeEngine
     cfg = get_config("qwen2-1.5b").reduced()
     model = build_model(cfg, Flags(remat=False))
     params = model.init(jax.random.key(0))
-    fm, _ = make_default_fabric(pool_gib=2)
-    fm.bind_host("h0")
-    fm.register_device(DeviceInfo("tpu0", DeviceClass.PCIE))
-    host = LMBHost(fm, "h0", page_bytes=4096)
-    eng = ServeEngine(model, params, host, EngineConfig(
+    system = system_for("tpu0", host_id="h0", pool_gib=2, page_bytes=4096)
+    eng = ServeEngine(model, params, system, EngineConfig(
         decode_slots=4, max_seq_len=64, page_tokens=8, onboard_pages=8,
         prefill_bucket=16))
     rng = np.random.default_rng(0)

@@ -1,8 +1,10 @@
-"""Quickstart: the LMB core in 60 lines.
+"""Quickstart: the LMB client API in 60 lines.
 
-Builds a fabric (expander + FM), registers a PCIe SSD and a CXL
-accelerator, exercises the Table-2 API (alloc / share / free), then backs
-an SSD's L2P index with a LinkedBuffer and shows tier traffic.
+Declares the whole stack in one SystemSpec (expanders, host, a PCIe SSD
+and a CXL accelerator), opens an LMBSystem session, exercises typed
+MemoryHandle capabilities (alloc / share / free — device-class-agnostic,
+no raw mmids), then backs an SSD's L2P index with a LinkedBuffer and
+shows tier traffic.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,42 +17,50 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DeviceClass, DeviceInfo, LMBHost, LinkedBuffer,
-                        make_default_fabric)
+from repro.core import (DeviceClass, DeviceSpec, ExpanderSpec, LMBSystem,
+                        StaleHandle, SystemSpec)
 
-# --- fabric: one 8 GiB expander behind a switch, managed by the FM ------
-fm, expander = make_default_fabric(pool_gib=8)
-fm.bind_host("host0")
-fm.register_device(DeviceInfo("ssd0", DeviceClass.PCIE))
-fm.register_device(DeviceInfo("accel0", DeviceClass.CXL, spid=0x11))
-lmb = LMBHost(fm, "host0")
+# --- the whole fabric, declaratively: one 8 GiB expander, one host, two
+# --- devices; the session owns FM/host/arbiter wiring and frees every
+# --- live grant when the with-block ends
+spec = SystemSpec(
+    expanders=(ExpanderSpec(gib=8),),
+    hosts=("host0",),
+    devices=(DeviceSpec("ssd0"),                            # PCIe (default)
+             DeviceSpec("accel0", DeviceClass.CXL, spid=0x11)))
 
-# --- Table-2 API ---------------------------------------------------------
-a = lmb.lmb_pcie_alloc("ssd0", 64 << 20)          # SSD takes 64 MiB
-print(f"alloc  -> mmid={a.mmid} hpa={a.hpa:#x} bytes={a.nbytes}")
+with LMBSystem(spec) as system:
+    # --- capability API: alloc/share/free dispatch on DeviceClass -------
+    with system.alloc("ssd0", 64 << 20) as h:   # SSD takes 64 MiB
+        print(f"alloc  -> {h}")
+        print(f"          pcie bus_addr={h.bus_addr:#x} != hpa={h.hpa:#x}"
+              "  (IOVA window)")
 
-s = lmb.lmb_pcie_share("ssd0", a.mmid, "accel0")  # zero-copy share
-print(f"share  -> accel0 sees hpa={s.hpa:#x} dpid={s.dpid} (same region)")
+        peer = h.share("accel0")                # zero-copy share
+        print(f"share  -> accel0 sees hpa={peer.hpa:#x} "
+              f"bus_addr={peer.bus_addr:#x} dpid={peer.dpid} (same region)")
+    # leaving the with-block freed the grant (and revoked accel0's map)
+    print(f"free   -> fm holds {system.fm.held_bytes('host0')} bytes "
+          "(block returned)")
+    try:
+        peer.expander()
+    except StaleHandle as e:
+        print(f"stale  -> {e}")
 
-lmb.lmb_cxl_free("accel0", a.mmid)                # sharer drops mapping
-lmb.lmb_pcie_free("ssd0", a.mmid)                 # owner frees; block
-print(f"free   -> fm holds {fm.held_bytes('host0')} bytes (block returned)")
+    # --- LinkedBuffer: an L2P table bigger than onboard DRAM ------------
+    # 64 logical pages of mapping entries; only 8 fit "onboard".
+    l2p = system.buffer(name="l2p", device_id="ssd0",
+                        page_shape=(1024,), dtype=jnp.uint32,
+                        onboard_pages=8, policy="clock", prefetch_depth=2)
+    pages = l2p.append_pages(64)
+    for p in pages:                                # populate the index
+        l2p.write(p, np.full((1024,), p, np.uint32))
 
-# --- LinkedBuffer: an L2P table bigger than onboard DRAM -----------------
-# 64 logical pages of mapping entries; only 8 fit "onboard".
-l2p = LinkedBuffer(name="l2p", device_id="ssd0", host=lmb,
-                   page_shape=(1024,), dtype=jnp.uint32,
-                   onboard_pages=8, policy="clock", prefetch_depth=2)
-pages = l2p.append_pages(64)
-for p in pages:                                    # populate the index
-    l2p.write(p, np.full((1024,), p, np.uint32))
+    rng = np.random.default_rng(0)
+    for lba in rng.zipf(1.5, 2000):                # hot/cold lookups
+        page = int(lba) % 64
+        entry = l2p.read(page)                     # faults cold pages in
+        assert int(entry[0]) == page
 
-hits = misses = 0
-rng = np.random.default_rng(0)
-for lba in rng.zipf(1.5, 2000):                    # hot/cold lookups
-    page = int(lba) % 64
-    entry = l2p.read(page)                         # faults cold pages in
-    assert int(entry[0]) == page
-
-print("l2p stats:", l2p.stats())
-print("fm snapshot:", fm.snapshot())
+    print("l2p stats:", l2p.stats())
+    print("fm snapshot:", system.snapshot())

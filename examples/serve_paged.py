@@ -16,7 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import DeviceClass, DeviceInfo, LMBHost, make_default_fabric
+from repro.core import DeviceSpec, HostSpec, LMBSystem, SystemSpec
 from repro.models import build_model
 from repro.models.flags import Flags
 from repro.serve import EngineConfig, ServeEngine
@@ -25,12 +25,12 @@ cfg = get_config("h2o-danube-3-4b").reduced()
 model = build_model(cfg, Flags(remat=False))
 params = model.init(jax.random.key(0))
 
-fm, _ = make_default_fabric(pool_gib=4)
-fm.bind_host("server")
-fm.register_device(DeviceInfo("tpu0", DeviceClass.PCIE))
-host = LMBHost(fm, "server", page_bytes=4096)
+system = LMBSystem(SystemSpec(
+    expanders=1, pool_gib=4,
+    hosts=(HostSpec("server", page_bytes=4096),),
+    devices=(DeviceSpec("tpu0"),)))
 
-eng = ServeEngine(model, params, host, EngineConfig(
+eng = ServeEngine(model, params, system, EngineConfig(
     decode_slots=3, max_seq_len=96, page_tokens=8,
     onboard_pages=6,          # deliberately tiny HBM-tier budget
     prefill_bucket=16))
@@ -56,4 +56,4 @@ eng.kv.append_tokens(sid, jnp.ones((L, 2, 16, KV, hd),
                                    jnp.dtype(cfg.dtype)))
 fork = eng.kv.fork(sid)
 print(f"forked seq {sid} -> {fork} with zero new LMB bytes "
-      f"(owned={host.owned_bytes('tpu0')})")
+      f"(owned={system.host().owned_bytes('tpu0')})")

@@ -3,8 +3,13 @@
 Layering (bottom-up):
   tiers     — latency/bandwidth model of each memory tier (Fig 2)
   pool      — expander (GFD/DMP/DPA) + 256 MB block allocator (Fig 4, §3.2)
+  placement — pluggable block→expander placement policies
   fabric    — Fabric Manager, SAT/IOMMU access control, failure handling
-  api       — Table-2 kernel API: alloc / free / share, mmid handles
+  api       — Table-2 kernel API: class-agnostic alloc / free / share
+              (+ deprecated lmb_pcie_*/lmb_cxl_* shims), mmid regions
+  client    — the public surface: LMBSystem sessions built from one
+              declarative SystemSpec, typed MemoryHandle capabilities
+              (StaleHandle on use-after-free / after-failover)
   policy    — eviction (LRU/CLOCK/cost-aware) + prefetch
   offload   — JAX realization of tier moves (memory_kind=pinned_host)
   buffer    — LinkedBuffer: paged logical arrays spanning tiers
@@ -12,10 +17,17 @@ Layering (bottom-up):
 
 from repro.core.api import Allocation, LMBHost
 from repro.core.buffer import LinkedBuffer
+from repro.core.client import (DeviceSpec, ExpanderSpec, HostSpec,
+                               LMBSystem, MemoryHandle, StaleHandle,
+                               SystemSpec, TenantSpec, system_for)
 from repro.core.fabric import (AccessDenied, DeviceClass, DeviceInfo,
                                FabricManager, make_default_fabric,
                                make_multi_fabric)
 from repro.core.offload import TierExecutor, supports_in_jit_offload
+from repro.core.placement import (ExpanderView, HeatAwarePolicy,
+                                  LeastLoadedPolicy, PlacementPolicy,
+                                  PlacementRequest, TenantAffinityPolicy,
+                                  make_placement_policy)
 from repro.core.pool import (BLOCK_BYTES, BlockAllocator, Expander,
                              InvalidHandle, LMBError, MediaKind, OutOfMemory)
 from repro.core.tiers import (TierKind, TierSpec, congested_latency,
@@ -28,4 +40,11 @@ __all__ = [
     "supports_in_jit_offload", "BLOCK_BYTES", "BlockAllocator", "Expander",
     "InvalidHandle", "LMBError", "MediaKind", "OutOfMemory", "TierKind",
     "TierSpec", "congested_latency", "paper_tiers", "tpu_tiers",
+    # client API (the public surface)
+    "LMBSystem", "MemoryHandle", "StaleHandle", "SystemSpec",
+    "ExpanderSpec", "HostSpec", "DeviceSpec", "TenantSpec", "system_for",
+    # placement policies
+    "PlacementPolicy", "PlacementRequest", "ExpanderView",
+    "LeastLoadedPolicy", "HeatAwarePolicy", "TenantAffinityPolicy",
+    "make_placement_policy",
 ]

@@ -1,19 +1,30 @@
 """LMB kernel-module API (paper Table 2).
 
 ``LMBHost`` plays the role of the LMB kernel module on one host: it owns a
-``BlockAllocator`` fed by the Fabric Manager, exposes the Table-2 interface
+``BlockAllocator`` fed by the Fabric Manager, exposes the device-class-
+agnostic verbs
 
-    lmb_pcie_alloc(dev, size)      -> Allocation(hpa, mmid)
-    lmb_cxl_alloc(cxld, size)      -> Allocation(hpa, mmid, dpid)
-    lmb_pcie_free(dev, mmid)
-    lmb_cxl_free(cxld, mmid)
-    lmb_pcie_share(dev, mmid)      -> Allocation for the target device
-    lmb_cxl_share(cxld, mmid)
+    alloc(dev, size)               -> Allocation(hpa, mmid[, dpid])
+    free(dev, mmid)
+    share(dev, mmid, target)       -> Allocation for the target device
 
-and maintains the HPA/bus-address ↔ physical mapping plus the access-control
-entries (IOMMU/SAT) through the FM.  The paper's "loading priority" concern
-(LMB must exist before device drivers initialize) maps to LMBHost being
-constructed before any consumer in our launchers.
+which dispatch on the registered device's :class:`DeviceClass` internally
+(PCIe → IOMMU mappings + IOVA bus addresses; CXL → SAT entries + HPA bus
+addresses + expander DPID for P2P).  The paper's Table-2 names
+
+    lmb_pcie_alloc / lmb_cxl_alloc / lmb_pcie_free / lmb_cxl_free
+    lmb_pcie_share / lmb_cxl_share
+
+remain as thin deprecated shims so the paper mapping stays legible; new
+code should go through :class:`repro.core.client.LMBSystem`, which wraps
+these verbs in typed :class:`~repro.core.client.MemoryHandle` capabilities.
+
+``LMBHost`` maintains the HPA/bus-address ↔ physical mapping plus the
+access-control entries (IOMMU/SAT) through the FM, and a per-expander
+**generation counter** bumped on every failover — the staleness signal
+``MemoryHandle`` capabilities check before acting.  The paper's "loading
+priority" concern (LMB must exist before device drivers initialize) maps
+to LMBHost being constructed before any consumer in our launchers.
 """
 
 from __future__ import annotations
@@ -30,6 +41,14 @@ from repro.core.pool import (DEFAULT_PAGE_BYTES, BlockAllocator, LMBError,
 #: HPA window where expander blocks get mapped on the host (arbitrary base
 #: chosen above typical host DRAM; purely a modeling constant).
 HPA_WINDOW_BASE = 0x4000_0000_0000
+
+#: IOVA window PCIe devices see through their IOMMU domain.  Identity-
+#: mapped *within* the window (same block/offset layout as the HPA
+#: window) but at a distinct base: a PCIe device's DMA address is an
+#: IOMMU translation, not a host physical address, and conflating the
+#: two would hide exactly the PCIe-vs-CXL addressing split the paper's
+#: Table 2 encodes in its verb names.
+PCIE_IOVA_BASE = 0x8000_0000_0000
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,14 +77,18 @@ class LMBHost:
         self.media = media
         self.metrics = metrics or GLOBAL_METRICS
         self._expander_dpid = expander_dpid
-        fm.bind_host(host_id) if host_id not in fm.snapshot()["hosts"] else None
+        fm.bind_host(host_id)           # idempotent: no-op if already bound
         self.allocator = BlockAllocator(
-            request_block=lambda eid=None: fm.request_block(
-                host_id, media, expander_id=eid),
+            request_block=lambda eid=None, dev=None: fm.request_block(
+                host_id, media, expander_id=eid, device_id=dev),
             return_block=lambda bid: fm.return_block(host_id, bid),
             page_bytes=page_bytes)
         # mmid -> set of device_ids with access (owner first)
         self._sharers: Dict[int, list[str]] = {}
+        # expander_id -> generation, bumped on every failover touching it;
+        # MemoryHandle capabilities record the generation at grant time
+        # and refuse to act once it moves (StaleHandle)
+        self._generation: Dict[int, int] = {}
         # registered BEFORE any LinkedBuffer (they attach to this host
         # afterwards), so allocator state for a dead expander is gone by
         # the time consumers handle the same failover notification
@@ -77,6 +100,10 @@ class LMBHost:
         would let new allocations land on the dead expander.  Then adopt
         the blank replacement grants, so the capacity the FM preserved
         (and still charges against our quota) is actually allocatable."""
+        # invalidate capabilities first: any handle granted on this
+        # expander must observe the generation bump before it can race
+        # a free/share against the dropped allocator state
+        self._generation[expander_id] = self.generation_of(expander_id) + 1
         for mmid in self.allocator.drop_expander(expander_id):
             self._sharers.pop(mmid, None)
         # adopt only replacements on HEALTHY expanders — after a total-pool
@@ -95,13 +122,25 @@ class LMBHost:
 
     def _bus_addr_of(self, region: Region, device: DeviceInfo) -> int:
         if device.device_class is DeviceClass.PCIE:
-            # IOVA == HPA in our model (identity-mapped IOMMU domain)
-            return self._hpa_of(region)
+            # PCIe devices DMA through the IOMMU: identity-mapped IOVA
+            # window at a base distinct from the HPA window
+            return (PCIE_IOVA_BASE
+                    + (self._hpa_of(region) - HPA_WINDOW_BASE))
+        # CXL devices address the expander with the HPA directly (P2P)
         return self._hpa_of(region)
 
-    # -- Table 2: alloc ----------------------------------------------------------
-    def _alloc(self, device_id: str, nbytes: int,
-               expander_id: Optional[int] = None) -> Allocation:
+    # -- generations (capability staleness) ------------------------------------
+    def generation_of(self, expander_id: int) -> int:
+        """Current failover generation of one expander; a MemoryHandle
+        minted at generation g is stale once this moves past g."""
+        return self._generation.get(expander_id, 0)
+
+    # -- alloc (device-class-agnostic; dispatches on DeviceClass) ---------------
+    def alloc(self, device_id: str, nbytes: int,
+              expander_id: Optional[int] = None) -> Allocation:
+        """Allocate LMB memory for a device (Table-2 alloc, class-agnostic):
+        the registered DeviceClass decides IOMMU-vs-SAT authorization and
+        the bus-address window, so callers never branch on bus type."""
         device = self.fm.device(device_id)
         region = self.allocator.alloc(device_id, nbytes,
                                       expander_id=expander_id)
@@ -120,18 +159,22 @@ class LMBHost:
 
     def lmb_pcie_alloc(self, device_id: str, nbytes: int,
                        expander_id: Optional[int] = None) -> Allocation:
+        """Deprecated Table-2 shim: ``alloc`` restricted to PCIe devices."""
         if self.fm.device(device_id).device_class is not DeviceClass.PCIE:
             raise LMBError(f"{device_id} is not a PCIe device")
-        return self._alloc(device_id, nbytes, expander_id)
+        return self.alloc(device_id, nbytes, expander_id)
 
     def lmb_cxl_alloc(self, device_id: str, nbytes: int,
                       expander_id: Optional[int] = None) -> Allocation:
+        """Deprecated Table-2 shim: ``alloc`` restricted to CXL devices."""
         if self.fm.device(device_id).device_class is not DeviceClass.CXL:
             raise LMBError(f"{device_id} is not a CXL device")
-        return self._alloc(device_id, nbytes, expander_id)
+        return self.alloc(device_id, nbytes, expander_id)
 
-    # -- Table 2: free -------------------------------------------------------------
-    def _free(self, device_id: str, mmid: int) -> None:
+    # -- free (device-class-agnostic) -------------------------------------------
+    def free(self, device_id: str, mmid: int) -> None:
+        """Free (owner) or drop a mapping of (sharer) an allocation
+        (Table-2 free, class-agnostic)."""
         region = self.allocator.region(mmid)
         sharers = self._sharers.get(mmid, [])
         if device_id not in sharers:
@@ -152,14 +195,20 @@ class LMBHost:
         self.metrics.event(device_id, f"free mmid={mmid}")
 
     def lmb_pcie_free(self, device_id: str, mmid: int) -> None:
-        self._free(device_id, mmid)
+        """Deprecated Table-2 shim for :meth:`free`."""
+        self.free(device_id, mmid)
 
     def lmb_cxl_free(self, device_id: str, mmid: int) -> None:
-        self._free(device_id, mmid)
+        """Deprecated Table-2 shim for :meth:`free`."""
+        self.free(device_id, mmid)
 
-    # -- Table 2: share ---------------------------------------------------------------
-    def _share(self, src_device: str, mmid: int,
-               dst_device: str) -> Allocation:
+    # -- share (device-class-agnostic) ------------------------------------------
+    def share(self, src_device: str, mmid: int,
+              dst_device: str) -> Allocation:
+        """Grant ``dst_device`` zero-copy access to ``src_device``'s
+        allocation (Table-2 share, class-agnostic): the destination's
+        DeviceClass decides SAT-vs-IOMMU authorization and the returned
+        bus address/DPID."""
         region = self.allocator.region(mmid)
         sharers = self._sharers.get(mmid, [])
         if src_device not in sharers:
@@ -183,11 +232,13 @@ class LMBHost:
 
     def lmb_pcie_share(self, device_id: str, mmid: int,
                        target_device: str) -> Allocation:
-        return self._share(device_id, mmid, target_device)
+        """Deprecated Table-2 shim for :meth:`share`."""
+        return self.share(device_id, mmid, target_device)
 
     def lmb_cxl_share(self, device_id: str, mmid: int,
                       target_device: str) -> Allocation:
-        return self._share(device_id, mmid, target_device)
+        """Deprecated Table-2 shim for :meth:`share`."""
+        return self.share(device_id, mmid, target_device)
 
     # -- data-path access check (used by LinkedBuffer + tests) ---------------------
     def check_access(self, device_id: str, mmid: int, page: int = 0) -> None:

@@ -39,7 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import Allocation, LMBHost
+from repro.core.api import LMBHost
+from repro.core.client import MemoryHandle
 from repro.core.metrics import Metrics, GLOBAL_METRICS
 from repro.core.offload import TierExecutor
 from repro.core.policy import EvictionPolicy, Prefetcher, make_policy
@@ -123,7 +124,8 @@ class LinkedBuffer:
         self._lmb_chunk_pages = lmb_chunk_pages
         self._lmb_scales: Dict[int, float] = {}   # slot -> absmax scale
         self._lmb_pools: List[Optional[jax.Array]] = []  # None = reclaimed
-        self._lmb_allocs: List[Optional[Allocation]] = []
+        #: per-chunk capability for the backing LMB allocation
+        self._lmb_allocs: List[Optional[MemoryHandle]] = []
         self._lmb_free: List[int] = []            # global lmb slot ids
         self._lmb_owner: Dict[int, int] = {}
         self._lmb_homes: List[int] = []           # chunk -> expander id
@@ -161,15 +163,16 @@ class LinkedBuffer:
         if self.degraded:
             raise OutOfMemory(f"{self.name}: LMB tier unavailable (degraded)")
         chunk_bytes = self._lmb_chunk_pages * self.lmb_page_bytes
-        alloc = self.host.lmb_pcie_alloc(self.device_id, chunk_bytes,
-                                         expander_id=expander_id)
+        # class-agnostic capability alloc: the host dispatches PCIe/CXL
+        handle = MemoryHandle.alloc(self.host, self.device_id, chunk_bytes,
+                                    expander_id=expander_id)
         pool = self.executor.alloc_pool(
             self._lmb_chunk_pages, self.page_shape,
             jnp.int8 if self.compress_lmb else self.dtype, tier="lmb")
         chunk_idx = len(self._lmb_pools)
         self._lmb_pools.append(pool)
-        self._lmb_allocs.append(alloc)
-        self._lmb_homes.append(self.host.expander_of(alloc.mmid))
+        self._lmb_allocs.append(handle)
+        self._lmb_homes.append(handle.expander())
         self._lmb_used.append(0)
         base = chunk_idx * self._lmb_chunk_pages
         self._lmb_free.extend(range(base, base + self._lmb_chunk_pages))
@@ -505,11 +508,38 @@ class LinkedBuffer:
             self._lmb_free = [
                 s for s in self._lmb_free
                 if not base <= s < base + self._lmb_chunk_pages]
-            self.host.lmb_pcie_free(self.device_id,
-                                    self._lmb_allocs[chunk].mmid)
+            self._lmb_allocs[chunk].free()
             self._lmb_pools[chunk] = None
             self._lmb_allocs[chunk] = None
             self._lmb_homes[chunk] = -1
+
+    # ------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Release the buffer's entire LMB footprint: every live chunk
+        capability is freed back through the Table-2 path (revoking
+        SAT/IOMMU entries, returning drained blocks to the FM).  LMB-
+        resident pages revert to 'never written'; the buffer enters
+        degraded (onboard-only) mode so later paging cannot silently
+        re-acquire LMB quota, and its failover callback is removed from
+        the FM.  Called by LMBSystem.close() so a session cannot leak
+        quota through its buffers."""
+        self.degraded = True
+        self.host.fm.off_failover(self._on_failover)
+        for chunk, handle in enumerate(self._lmb_allocs):
+            if handle is None:
+                continue
+            if not handle.stale:
+                handle.free()
+            self._lmb_pools[chunk] = None
+            self._lmb_allocs[chunk] = None
+            self._lmb_homes[chunk] = -1
+            self._lmb_used[chunk] = 0
+        for e in self._pages:
+            if e.tier == LMB:
+                e.tier, e.slot, e.dirty = None, -1, False
+        self._lmb_owner.clear()
+        self._lmb_scales.clear()
+        self._lmb_free = []
 
     # ------------------------------------------------------------ failure path
     def _on_failover(self, expander_id: Optional[int] = None) -> None:

@@ -27,6 +27,8 @@ import threading
 from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple,
                     Union)
 
+from repro.core.placement import (ExpanderView, PlacementPolicy,
+                                  PlacementRequest, make_placement_policy)
 from repro.core.pool import (BLOCK_BYTES, BlockGrant, Expander,
                              InvalidHandle, LMBError, MediaKind,
                              OutOfMemory)
@@ -51,6 +53,9 @@ class DeviceInfo:
     bw_weight: float = 1.0
     #: token-bucket burst allowance on the link; 0 = no burst credit
     bw_burst_bytes: int = 0
+    #: tenant this device belongs to — placement policies (e.g.
+    #: tenant-affinity) and per-tenant QoS key on it; None = untenanted
+    tenant: Optional[str] = None
 
 
 class AccessDenied(LMBError):
@@ -145,8 +150,12 @@ class FabricManager:
 
     def __init__(self, expander: Union[Expander, Sequence[Expander]],
                  spare: Optional[Expander] = None,
-                 link_bandwidth_Bps: float = DEFAULT_LINK_BW_Bps):
+                 link_bandwidth_Bps: float = DEFAULT_LINK_BW_Bps,
+                 placement: Union[str, PlacementPolicy, None] = None):
         self._lock = threading.RLock()
+        #: block→expander placement policy (repro.core.placement);
+        #: injected via SystemSpec, defaults to least-loaded
+        self._placement: PlacementPolicy = make_placement_policy(placement)
         exps = (list(expander) if isinstance(expander, (list, tuple))
                 else [expander])
         if not exps:
@@ -198,28 +207,34 @@ class FabricManager:
             raise InvalidHandle(f"block {block_id} has no home expander")
         return eid
 
-    def _coolest(self, media: MediaKind,
-                 exclude: Sequence[int] = (),
-                 require_room: bool = True) -> Optional[Expander]:
-        """The ONE placement criterion: healthy expander with the coolest
-        link and (unless ``require_room`` is off) at least a block of
-        ``media`` free — free space breaks utilization ties.  Shared by
-        block placement and migration targeting so the two policies
-        cannot drift."""
-        cands = [e for e in self._healthy_expanders()
-                 if e.expander_id not in exclude
-                 and (not require_room
-                      or e.free_bytes(media) >= BLOCK_BYTES)]
-        if not cands:
-            return None
-        return min(cands,
-                   key=lambda e: (self._arbiters[e.expander_id].utilization(),
-                                  -e.free_bytes(media), e.expander_id))
+    def _views(self, media: MediaKind,
+               exclude: Sequence[int] = (),
+               require_room: bool = True) -> List[ExpanderView]:
+        """Candidate expanders as the placement policy sees them: healthy,
+        not excluded, and (unless ``require_room`` is off) with at least
+        one free block of ``media``."""
+        return [ExpanderView(
+                    expander_id=e.expander_id,
+                    free_bytes=e.free_bytes(media),
+                    utilization=self._arbiters[e.expander_id].utilization())
+                for e in self._healthy_expanders()
+                if e.expander_id not in exclude
+                and (not require_room
+                     or e.free_bytes(media) >= BLOCK_BYTES)]
+
+    def _request_for(self, media: MediaKind, host_id: Optional[str] = None,
+                     device_id: Optional[str] = None) -> PlacementRequest:
+        info = self._devices.get(device_id) if device_id else None
+        return PlacementRequest(media=media, host_id=host_id,
+                                device_id=device_id,
+                                tenant=info.tenant if info else None)
 
     def _pick_expander(self, media: MediaKind,
-                       expander_id: Optional[int] = None) -> Expander:
-        """Block placement: requested expander, else the coolest healthy
-        expander with room."""
+                       expander_id: Optional[int] = None,
+                       host_id: Optional[str] = None,
+                       device_id: Optional[str] = None) -> Expander:
+        """Block placement: requested expander, else whatever the injected
+        placement policy picks from the healthy-with-room candidates."""
         if expander_id is not None:
             exp = self._expanders.get(expander_id)
             if exp is None:
@@ -230,14 +245,26 @@ class FabricManager:
         healthy = self._healthy_expanders()
         if not healthy:
             raise LMBError("no healthy expander in the pool")
-        exp = self._coolest(media)
-        if exp is None:
+        eid = self._placement.choose(
+            self._request_for(media, host_id, device_id),
+            self._views(media))
+        exp = self._expanders.get(eid) if eid is not None else None
+        if exp is None or exp.failed:
             return healthy[0]               # let grant_block raise OOM
         return exp
 
     # -- binding -------------------------------------------------------------
     def bind_host(self, host_id: str, quota_bytes: Optional[int] = None) -> None:
+        """Bind a host (idempotent).  Re-binding an already-bound host is
+        a no-op unless an explicit quota is given, in which case it acts
+        like :meth:`set_quota` — it never silently resets a configured
+        quota back to the pool total."""
         with self._lock:
+            if host_id in self._hosts:
+                if (quota_bytes is not None
+                        and quota_bytes != self._hosts[host_id]):
+                    self.set_quota(host_id, quota_bytes)
+                return
             quota = (quota_bytes if quota_bytes is not None
                      else self.total_bytes)
             self._hosts[host_id] = quota
@@ -275,7 +302,8 @@ class FabricManager:
     # -- block grant/release (called by host BlockAllocators) ----------------
     def request_block(self, host_id: str,
                       media: MediaKind = MediaKind.DRAM,
-                      expander_id: Optional[int] = None) -> BlockGrant:
+                      expander_id: Optional[int] = None,
+                      device_id: Optional[str] = None) -> BlockGrant:
         with self._lock:
             if host_id not in self._hosts:
                 raise InvalidHandle(f"host {host_id} not bound")
@@ -284,7 +312,8 @@ class FabricManager:
                 raise OutOfMemory(
                     f"host {host_id} quota exceeded "
                     f"({held + BLOCK_BYTES} > {self._hosts[host_id]})")
-            exp = self._pick_expander(media, expander_id)
+            exp = self._pick_expander(media, expander_id,
+                                      host_id=host_id, device_id=device_id)
             grant = exp.grant_block(host_id, media)
             self._granted[host_id].append(grant)
             self._block_home[grant.block_id] = exp.expander_id
@@ -376,16 +405,16 @@ class FabricManager:
     def least_loaded_expander(
             self, exclude: Sequence[int] = (),
             media: MediaKind = MediaKind.DRAM) -> Optional[int]:
-        """Migration target: the same coolest-healthy-with-room criterion
-        block placement uses.  When no expander has a whole free block,
-        falls back to the coolest healthy one anyway — migration into a
-        consumer's EXISTING free slots there needs no new block, and
+        """Migration target: delegated to the SAME placement policy block
+        placement uses, so the two cannot drift.  When no expander has a
+        whole free block, falls back to candidates without room — the
+        migration may fit a consumer's EXISTING free slots there, and
         migrate_pages stops cleanly if growth is refused.  None only when
         the pool offers no alternative expander at all."""
-        exp = self._coolest(media, exclude)
-        if exp is None:
-            exp = self._coolest(media, exclude, require_room=False)
-        return exp.expander_id if exp is not None else None
+        views = self._views(media, exclude)
+        if not views:
+            views = self._views(media, exclude, require_room=False)
+        return self._placement.choose(self._request_for(media), views)
 
     def record_migration(self, device_id: str, src_expander: int,
                          dst_expander: int, npages: int,
@@ -430,6 +459,15 @@ class FabricManager:
         """Register a consumer callback invoked with the failed expander's
         id after its blocks have been re-granted elsewhere."""
         self._failover_listeners.append(cb)
+
+    def off_failover(self, cb: Callable[[int], None]) -> None:
+        """Deregister a failover callback (consumer teardown, e.g.
+        LinkedBuffer.close) — keeps churned consumers from accumulating
+        on the FM for its lifetime.  Unknown callbacks are a no-op."""
+        try:
+            self._failover_listeners.remove(cb)
+        except ValueError:
+            pass
 
     def _promote_spare(self) -> Expander:
         """Standby joins the pool: fresh arbiter seeded with every device's
@@ -531,6 +569,7 @@ class FabricManager:
                                   for e in self._healthy_expanders()),
                 "journal_len": len(self.journal),
                 "healthy": self.healthy,
+                "placement_policy": self._placement.name,
                 "link": self.arbiter.snapshot(),
                 "placement": self.placement(),
                 "expanders": {

@@ -258,9 +258,11 @@ class BlockAllocator:
     ``request_block`` / ``return_block`` are callbacks into the Fabric
     Manager; the allocator asks for one block at a time when it cannot
     satisfy a request (paper §3.2) and returns a block as soon as it is
-    entirely free.  ``request_block`` takes an optional expander hint so
-    placement-aware callers (hot-page migration) can direct a region onto
-    a specific expander's blocks.
+    entirely free.  ``request_block(expander_id, owner)`` takes an
+    optional expander hint so placement-aware callers (hot-page
+    migration) can direct a region onto a specific expander's blocks,
+    plus the requesting device so the FM's placement policy can key on
+    its tenant (repro.core.placement).
     """
 
     def __init__(self, request_block, return_block,
@@ -315,8 +317,7 @@ class BlockAllocator:
             if start is not None:
                 return self._commit(owner, bs, start, npages)
         # no room: request one more block from the FM (paper §3.2)
-        grant = (self._request_block() if expander_id is None
-                 else self._request_block(expander_id))
+        grant = self._request_block(expander_id, owner)
         bs = _BlockState(grant, self.page_bytes)
         self._blocks[grant.block_id] = bs
         start = bs.find_run(npages)

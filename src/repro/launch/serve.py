@@ -14,8 +14,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import LMBHost, make_default_fabric
-from repro.core.fabric import DeviceClass, DeviceInfo
+from repro.core import DeviceSpec, HostSpec, LMBSystem, SystemSpec
 from repro.models import build_model
 from repro.models.flags import Flags
 from repro.serve import EngineConfig, ServeEngine
@@ -35,26 +34,25 @@ def main() -> None:
     model = build_model(cfg, Flags(remat=False))
     params = model.init(jax.random.key(0))
 
-    fm, _ = make_default_fabric(pool_gib=args.pool_gib)
-    fm.bind_host("server")
-    fm.register_device(DeviceInfo("tpu0", DeviceClass.PCIE))
-    host = LMBHost(fm, "server", page_bytes=4096)
-
-    eng = ServeEngine(model, params, host, EngineConfig(
-        decode_slots=args.decode_slots, max_seq_len=128, page_tokens=16,
-        onboard_pages=args.onboard_pages))
-    rng = np.random.default_rng(0)
-    t0 = time.monotonic()
-    for _ in range(args.requests):
-        eng.submit(rng.integers(0, cfg.vocab_size,
-                                int(rng.integers(4, 48))),
-                   max_new_tokens=args.max_new_tokens)
-    eng.run()
-    wall = time.monotonic() - t0
-    st = eng.stats()
-    st["wall_s"] = wall
-    st["tok_per_s"] = args.requests * args.max_new_tokens / wall
-    print(json.dumps(st, indent=1, default=str))
+    spec = SystemSpec(expanders=1, pool_gib=args.pool_gib,
+                      hosts=(HostSpec("server", page_bytes=4096),),
+                      devices=(DeviceSpec("tpu0"),))
+    with LMBSystem(spec) as system:
+        eng = ServeEngine(model, params, system, EngineConfig(
+            decode_slots=args.decode_slots, max_seq_len=128, page_tokens=16,
+            onboard_pages=args.onboard_pages))
+        rng = np.random.default_rng(0)
+        t0 = time.monotonic()
+        for _ in range(args.requests):
+            eng.submit(rng.integers(0, cfg.vocab_size,
+                                    int(rng.integers(4, 48))),
+                       max_new_tokens=args.max_new_tokens)
+        eng.run()
+        wall = time.monotonic() - t0
+        st = eng.stats()
+        st["wall_s"] = wall
+        st["tok_per_s"] = args.requests * args.max_new_tokens / wall
+        print(json.dumps(st, indent=1, default=str))
 
 
 if __name__ == "__main__":

@@ -18,8 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config
-from repro.core import LMBHost, make_default_fabric
-from repro.core.fabric import DeviceClass, DeviceInfo
+from repro.core import DeviceSpec, HostSpec, LMBSystem, SystemSpec
 from repro.core.offload import (PINNED_HOST, backend_memory_kinds,
                                 supports_in_jit_offload, tree_put_tier,
                                 nbytes_of, DEVICE)
@@ -46,11 +45,13 @@ def run(arch: str, steps: int = 50, global_batch: int = 8,
     model = build_model(cfg, flags)
 
     # --- LMB pool for optimizer-state offload (host tier) ----------------
-    fm, _ = make_default_fabric(pool_gib=4)
-    fm.bind_host("trainer")
-    fm.register_device(DeviceInfo("tpu0", DeviceClass.PCIE))
-    lmb = LMBHost(fm, "trainer")
-    offload_allocs = []
+    # one declarative spec replaces the fabric/host/device hand-wiring;
+    # allocations below are MemoryHandle capabilities, freed via close()
+    system = LMBSystem(SystemSpec(
+        expanders=1, pool_gib=4,
+        hosts=(HostSpec("trainer"),),
+        devices=(DeviceSpec("tpu0"),)))
+    offload_handles = []
 
     rng = jax.random.key(0)
     params = model.init(rng)
@@ -80,7 +81,7 @@ def run(arch: str, steps: int = 50, global_batch: int = 8,
         remaining = max(nbytes_of(opt_state), 1)
         while remaining > 0:
             take = min(remaining, BLOCK_BYTES)
-            offload_allocs.append(lmb.lmb_pcie_alloc("tpu0", take))
+            offload_handles.append(system.alloc("tpu0", take))
             remaining -= take
         if not supports_in_jit_offload():
             opt_state = tree_put_tier(opt_state, PINNED_HOST
@@ -117,8 +118,7 @@ def run(arch: str, steps: int = 50, global_batch: int = 8,
         if ckpt_dir and (step + 1) % ckpt_every == 0:
             save_checkpoint(ckpt_dir, step + 1,
                             {"params": params, "opt_state": opt_state})
-    for a in offload_allocs:
-        lmb.lmb_pcie_free("tpu0", a.mmid)
+    system.close()                 # frees every live offload handle
     return {
         "final_loss": losses[-1] if losses else None,
         "first_loss": losses[0] if losses else None,

@@ -75,11 +75,15 @@ class MigrationReport:
 
 class MigrationEngine:
     """Watches per-expander link utilization; moves hot LMB pages from the
-    most-saturated expander to the least-loaded one."""
+    most-saturated expander to the least-loaded one.
+
+    ``fm`` may be a FabricManager or an ``LMBSystem`` client session
+    (anything carrying its FM as ``.fm`` — duck-typed to preserve this
+    module's no-core-imports rule)."""
 
     def __init__(self, fm: "FabricManager",
                  policy: Optional[MigrationPolicy] = None):
-        self.fm = fm
+        self.fm = getattr(fm, "fm", fm)
         self.policy = policy or MigrationPolicy()
         self._buffers: List["LinkedBuffer"] = []
         self.rounds = 0

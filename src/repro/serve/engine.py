@@ -23,13 +23,14 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import LMBHost
+from repro.core.client import LMBSystem
 from repro.models.zoo import Model
 from repro.qos.slo import AdmissionController, Decision
 from repro.serve.kv_cache import PagedKVStore
@@ -59,9 +60,15 @@ class EngineConfig:
 
 
 class ServeEngine:
-    def __init__(self, model: Model, params, host: LMBHost,
+    """``lmb`` is the LMB stack the KV store pages against: an
+    :class:`~repro.core.client.LMBSystem` session (the client API) or a
+    bare :class:`~repro.core.api.LMBHost` for low-level wiring."""
+
+    def __init__(self, model: Model, params,
+                 lmb: Union[LMBSystem, LMBHost],
                  ecfg: EngineConfig, device_id: str = "tpu0",
                  qos: Optional[AdmissionController] = None):
+        host = lmb.host() if isinstance(lmb, LMBSystem) else lmb
         self.model = model
         self.params = params
         self.ecfg = ecfg

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core.api import LMBHost
 from repro.core.buffer import LinkedBuffer
+from repro.core.client import LMBSystem
 from repro.core.offload import TierExecutor
 
 
@@ -40,11 +41,22 @@ class SeqPages:
 
 
 class PagedKVStore:
-    def __init__(self, *, cfg, host: LMBHost, device_id: str,
+    """KV pages over a LinkedBuffer.  Construct with ``system=`` (an
+    :class:`~repro.core.client.LMBSystem` session — the client API) or,
+    for low-level wiring, a bare ``host=`` LMBHost."""
+
+    def __init__(self, *, cfg, host: Optional[LMBHost] = None,
+                 system: Optional[LMBSystem] = None,
+                 host_id: Optional[str] = None,
+                 device_id: str,
                  page_tokens: int = 64, onboard_pages: int = 64,
                  n_layers: Optional[int] = None,
                  compress_cold: bool = False,
                  executor: Optional[TierExecutor] = None):
+        if host is None:
+            if system is None:
+                raise ValueError("PagedKVStore needs system= or host=")
+            host = system.host(host_id)
         self.cfg = cfg
         L = n_layers or cfg.num_layers
         KV, hd = cfg.num_kv_heads, cfg.head_dim_

@@ -1,0 +1,299 @@
+"""Client API (ISSUE 3): LMBSystem sessions, MemoryHandle capabilities,
+pluggable placement.
+
+Pins the capability invariants: double-free and share-after-free are
+typed errors (StaleHandle), failover bumps generations and kills exactly
+the handles homed on the dead expander, ``with``-scoped handles release
+quota, and a placement-policy swap (least-loaded → tenant-affinity)
+changes block placement without touching FabricManager.
+"""
+
+import pytest
+
+from repro.core import (BLOCK_BYTES, DeviceClass, DeviceSpec, ExpanderSpec,
+                        HeatAwarePolicy, HostSpec, LMBError, LMBSystem,
+                        LeastLoadedPolicy, StaleHandle, SystemSpec,
+                        TenantAffinityPolicy, TenantSpec, system_for)
+from repro.core.api import HPA_WINDOW_BASE, PCIE_IOVA_BASE
+from repro.core.placement import ExpanderView, PlacementRequest
+
+
+def two_device_spec(n_expanders=1, **kw):
+    return SystemSpec(
+        expanders=n_expanders, pool_gib=1,
+        hosts=(HostSpec("h0", page_bytes=4096),),
+        devices=(DeviceSpec("ssd0"),
+                 DeviceSpec("acc0", DeviceClass.CXL, spid=5)),
+        **kw)
+
+
+# ----------------------------------------------------------- spec/session
+class TestSystemSpec:
+    def test_session_owns_wiring(self):
+        with LMBSystem(two_device_spec()) as system:
+            assert system.host_ids == ["h0"]
+            assert system.fm.device("acc0").spid == 5
+            assert system.snapshot()["placement_policy"] == "least-loaded"
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            SystemSpec(hosts=()).validate()
+        with pytest.raises(ValueError):
+            SystemSpec(devices=(DeviceSpec("c0", DeviceClass.CXL),)
+                       ).validate()                     # CXL needs SPID
+        with pytest.raises(ValueError):
+            SystemSpec(devices=(DeviceSpec("d0", tenant="ghost"),),
+                       tenants=("real",)).validate()
+        with pytest.raises(ValueError):
+            SystemSpec(hosts=("h0", "h0")).validate()
+
+    def test_closed_session_refuses_allocs(self):
+        system = system_for("d0", pool_gib=1)
+        system.close()
+        with pytest.raises(LMBError):
+            system.alloc("d0", 4096)
+
+
+# ------------------------------------------------------- handle lifecycle
+class TestHandleLifecycle:
+    def test_double_free_raises_stale(self):
+        with LMBSystem(two_device_spec()) as system:
+            h = system.alloc("ssd0", 4096)
+            h.free()
+            with pytest.raises(StaleHandle):
+                h.free()
+
+    def test_share_after_free_raises_stale(self):
+        with LMBSystem(two_device_spec()) as system:
+            h = system.alloc("ssd0", 4096)
+            h.free()
+            with pytest.raises(StaleHandle):
+                h.share("acc0")
+
+    def test_owner_free_invalidates_sharer_handles(self):
+        with LMBSystem(two_device_spec()) as system:
+            h = system.alloc("ssd0", 4096)
+            s = h.share("acc0")
+            assert s.dpid is not None          # CXL sharer sees the DPID
+            h.free()
+            assert s.stale
+            with pytest.raises(StaleHandle):
+                s.expander()
+
+    def test_share_is_deduplicated_per_device(self):
+        """One live capability per (allocation, device): re-sharing to
+        the same device returns the existing handle, so no alias can be
+        left dangling by freeing its twin."""
+        with LMBSystem(two_device_spec()) as system:
+            h = system.alloc("ssd0", 4096)
+            s1 = h.share("acc0")
+            s2 = h.share("acc0")
+            assert s1 is s2
+            assert h.share("ssd0") is h        # owner's own device too
+            s1.free()
+            s3 = h.share("acc0")               # fresh grant after free
+            assert s3 is not s1 and not s3.stale
+
+    def test_session_registry_drops_freed_handles(self):
+        system = system_for("d0", pool_gib=1)
+        handles = [system.alloc("d0", 4096) for _ in range(8)]
+        for h in handles:
+            h.free()
+        assert len(system._handles) == 0       # no dead-handle buildup
+        assert system.live_handles() == []
+        system.close()
+
+    def test_sharer_free_drops_only_its_mapping(self):
+        with LMBSystem(two_device_spec()) as system:
+            h = system.alloc("ssd0", 4096)
+            s = h.share("acc0")
+            s.free()
+            assert not h.stale                 # owner unaffected
+            system.host().check_access("ssd0", h.mmid)
+
+    def test_with_scope_autofree_releases_quota(self):
+        with LMBSystem(two_device_spec()) as system:
+            fm = system.fm
+            with system.alloc("ssd0", 1 << 20) as h:
+                assert fm.held_bytes("h0") == BLOCK_BYTES
+                assert h.nbytes >= 1 << 20
+            # exiting the handle scope freed the region AND the block
+            assert fm.held_bytes("h0") == 0
+            assert system.live_handles() == []
+
+    def test_session_close_frees_leaks(self):
+        system = LMBSystem(two_device_spec())
+        system.alloc("ssd0", 4096)             # never freed by the caller
+        assert system.fm.held_bytes("h0") == BLOCK_BYTES
+        system.close()
+        assert system.fm.held_bytes("h0") == 0
+
+    def test_session_close_releases_buffer_footprint(self):
+        jnp = pytest.importorskip("jax.numpy")
+        system = LMBSystem(two_device_spec())
+        buf = system.buffer(name="b", device_id="ssd0",
+                            page_shape=(8, 8), dtype=jnp.float32,
+                            onboard_pages=2, lmb_chunk_pages=4)
+        for p in buf.append_pages(8):          # spills into the LMB tier
+            buf.write(p, jnp.ones((8, 8)))
+        assert system.fm.held_bytes("h0") > 0
+        system.close()                         # buffers drained too
+        assert system.fm.held_bytes("h0") == 0
+        buf.check_invariants()
+        # a closed buffer cannot silently re-acquire quota: growth into
+        # the LMB tier is refused (degraded, onboard-only)
+        from repro.core import OutOfMemory
+        with pytest.raises(OutOfMemory):
+            for p in buf.append_pages(8):
+                buf.write(p, jnp.ones((8, 8)))
+        assert system.fm.held_bytes("h0") == 0
+        # and the FM no longer holds the closed buffer as a listener
+        assert buf._on_failover not in system.fm._failover_listeners
+
+
+# ----------------------------------------------------- failover staleness
+class TestFailoverStaleness:
+    def test_stale_after_inject_failure(self):
+        system = system_for("d0", pool_gib=1, n_expanders=2)
+        h0 = system.alloc("d0", 4096, expander_id=0)
+        h1 = system.alloc("d0", 4096, expander_id=1)
+        system.inject_failure(0)
+        assert h0.stale and not h1.stale       # only the dead expander's
+        with pytest.raises(StaleHandle) as ei:
+            h0.expander()
+        assert "generation" in str(ei.value)
+        # survivor still fully operational
+        assert h1.expander() == 1
+        h1.free()
+
+    def test_generation_bump_is_per_expander(self):
+        system = system_for("d0", pool_gib=1, n_expanders=2)
+        host = system.host()
+        system.inject_failure(1)
+        assert host.generation_of(1) == 1
+        assert host.generation_of(0) == 0
+
+    def test_with_scope_tolerates_failover(self):
+        system = system_for("d0", pool_gib=1)
+        with system.alloc("d0", 4096):
+            system.inject_failure()            # kills the only expander
+        # __exit__ must not raise on the now-stale handle
+
+
+# ---------------------------------------------------------- Table-2 verbs
+class TestAgnosticVerbs:
+    def test_alloc_dispatches_on_device_class(self):
+        with LMBSystem(two_device_spec()) as system:
+            pcie = system.alloc("ssd0", 4096)
+            cxl = system.alloc("acc0", 4096)
+            assert pcie.dpid is None and cxl.dpid is not None
+            # same call, per-class addressing (no lmb_pcie_/lmb_cxl_ split)
+            assert pcie.bus_addr != pcie.hpa
+            assert cxl.bus_addr == cxl.hpa
+
+    def test_pcie_iova_window_is_identity_mapped(self):
+        """Satellite: PCIe devices get a distinct identity-mapped IOVA
+        window; CXL devices address with the HPA."""
+        with LMBSystem(two_device_spec()) as system:
+            h = system.alloc("ssd0", 4096)
+            assert h.bus_addr - PCIE_IOVA_BASE == h.hpa - HPA_WINDOW_BASE
+            assert PCIE_IOVA_BASE != HPA_WINDOW_BASE
+
+    def test_deprecated_shims_still_work(self):
+        """The Table-2 names survive as shims over the agnostic verbs."""
+        with LMBSystem(two_device_spec()) as system:
+            host = system.host()
+            a = host.lmb_pcie_alloc("ssd0", 4096)
+            s = host.lmb_pcie_share("ssd0", a.mmid, "acc0")
+            assert s.dpid is not None
+            host.lmb_cxl_free("acc0", a.mmid)
+            host.lmb_pcie_free("ssd0", a.mmid)
+            with pytest.raises(LMBError):
+                host.lmb_cxl_alloc("ssd0", 4096)   # class check preserved
+
+    def test_bind_host_idempotent(self):
+        """Satellite: re-binding is a no-op and never resets a quota."""
+        system = system_for("d0", pool_gib=1)
+        fm = system.fm
+        fm.set_quota("host0", BLOCK_BYTES)
+        fm.bind_host("host0")                      # idempotent re-bind
+        assert fm.snapshot()["hosts"]["host0"] == BLOCK_BYTES
+        binds = [j for j in fm.journal if j.op == "bind"]
+        assert len(binds) == 1
+
+
+# ------------------------------------------------------ placement policies
+class TestPlacementPolicies:
+    def _views(self, *triples):
+        return [ExpanderView(expander_id=e, free_bytes=f, utilization=u)
+                for e, f, u in triples]
+
+    def test_least_loaded_prefers_cool_then_roomy(self):
+        p = LeastLoadedPolicy()
+        views = self._views((0, 100, 0.9), (1, 50, 0.1), (2, 500, 0.1))
+        assert p.choose(PlacementRequest(), views) == 2
+        assert p.choose(PlacementRequest(), []) is None
+
+    def test_heat_aware_packs_by_capacity_when_cool(self):
+        p = HeatAwarePolicy(hot_threshold=0.5)
+        cool = self._views((0, 100, 0.2), (1, 500, 0.3))
+        assert p.choose(PlacementRequest(), cool) == 1   # most free bytes
+        hot = self._views((0, 100, 0.9), (1, 500, 0.7))
+        assert p.choose(PlacementRequest(), hot) == 1    # least loaded
+
+    def test_tenant_affinity_sticky_round_robin(self):
+        p = TenantAffinityPolicy()
+        views = self._views((0, 100, 0.0), (1, 100, 0.0))
+        a = p.choose(PlacementRequest(tenant="a"), views)
+        b = p.choose(PlacementRequest(tenant="b"), views)
+        assert {a, b} == {0, 1}
+        # sticky on repeat, even when the other link is idler
+        views2 = self._views((0, 100, 0.9), (1, 100, 0.9))
+        assert p.choose(PlacementRequest(tenant="a"), views2) == a
+        assert p.assignments == {"a": a, "b": b}
+
+    def test_policy_swap_without_touching_fabric(self):
+        """Acceptance: least-loaded → tenant-affinity is a SystemSpec
+        change only; FabricManager is untouched."""
+
+        def build(placement):
+            return LMBSystem(SystemSpec(
+                expanders=(ExpanderSpec(gib=1), ExpanderSpec(gib=1)),
+                hosts=(HostSpec("h0", page_bytes=4096),),
+                devices=(DeviceSpec("gold0", tenant="gold"),
+                         DeviceSpec("gold1", tenant="gold"),
+                         DeviceSpec("best0", tenant="besteffort")),
+                tenants=(TenantSpec("gold", preferred_expander=0),
+                         TenantSpec("besteffort", preferred_expander=1)),
+                placement=placement))
+
+        # tenant-affinity: each tenant's blocks stay on its home expander
+        with build("tenant-affinity") as system:
+            g0 = system.alloc("gold0", BLOCK_BYTES // 2)
+            g1 = system.alloc("gold1", BLOCK_BYTES // 2)
+            b0 = system.alloc("best0", BLOCK_BYTES // 2)
+            assert g0.expander() == 0 and g1.expander() == 0
+            assert b0.expander() == 1
+            assert system.snapshot()["placement_policy"] == "tenant-affinity"
+
+        # least-loaded (default): the same allocs spread for balance —
+        # the second gold alloc lands on the emptier expander instead
+        with build("least-loaded") as system:
+            system.alloc("gold0", BLOCK_BYTES // 2)
+            g1 = system.alloc("gold1", BLOCK_BYTES)
+            assert g1.expander() == 1
+
+    def test_affinity_falls_back_when_home_full(self):
+        spec = SystemSpec(
+            expanders=(ExpanderSpec(gib=1), ExpanderSpec(gib=1)),
+            hosts=(HostSpec("h0", page_bytes=4096),),
+            devices=(DeviceSpec("d0", tenant="t"),),
+            tenants=(TenantSpec("t", preferred_expander=0),),
+            placement="tenant-affinity")
+        with LMBSystem(spec) as system:
+            handles = [system.alloc("d0", BLOCK_BYTES)
+                       for _ in range(4)]     # 1 GiB = 4 blocks per exp
+            homes = [h.expander() for h in handles]
+            assert homes == [0, 0, 0, 0]      # affinity while room
+            spill = system.alloc("d0", BLOCK_BYTES)
+            assert spill.expander() == 1      # graceful spill, no OOM

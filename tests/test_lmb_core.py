@@ -89,6 +89,17 @@ class TestAPI:
         with pytest.raises(OutOfMemory):
             host.lmb_pcie_alloc("ssd0", BLOCK_BYTES)
 
+    def test_pcie_and_cxl_bus_addressing_differ(self):
+        """PCIe devices DMA through a distinct identity-mapped IOVA
+        window; CXL devices address the region with its HPA."""
+        from repro.core.api import HPA_WINDOW_BASE, PCIE_IOVA_BASE
+        host, _, _ = make_host()
+        a = host.lmb_pcie_alloc("ssd0", 4096)
+        assert a.bus_addr != a.hpa
+        assert a.bus_addr - PCIE_IOVA_BASE == a.hpa - HPA_WINDOW_BASE
+        c = host.lmb_cxl_alloc("acc0", 4096)
+        assert c.bus_addr == c.hpa
+
     def test_cxl_vs_pcie_class_enforced(self):
         host, _, _ = make_host()
         with pytest.raises(LMBError):

@@ -14,18 +14,17 @@ import numpy as np
 import pytest
 
 from repro.core import (LMBHost, LinkedBuffer, make_default_fabric,
-                        make_multi_fabric)
+                        system_for)
 from repro.core.fabric import DeviceClass, DeviceInfo
 from repro.core.pool import BLOCK_ID_STRIDE
 from repro.qos import MigrationEngine, MigrationPolicy, plan_rebalance
 
 
 def make_pooled(n_expanders=2, pool_gib=1, page_bytes=1 << 16):
-    fm, exps = make_multi_fabric(n_expanders=n_expanders, pool_gib=pool_gib)
-    fm.bind_host("h0")
-    fm.register_device(DeviceInfo("d0", DeviceClass.PCIE))
-    host = LMBHost(fm, "h0", page_bytes=page_bytes)
-    return fm, host
+    """Pooled stack constructed through the client API (LMBSystem)."""
+    system = system_for("d0", host_id="h0", n_expanders=n_expanders,
+                        pool_gib=pool_gib, page_bytes=page_bytes)
+    return system.fm, system.host()
 
 
 def make_buffer(host, n_pages=12, onboard=2, chunk=4, **kw):

@@ -11,7 +11,6 @@ import pytest
 
 from repro.core import congested_latency, make_default_fabric
 from repro.core.fabric import DeviceClass, DeviceInfo
-from repro.core.api import LMBHost
 from repro.qos import (AdmissionController, Decision, LinkArbiter, LinkState,
                        ContendedTierSpec, SLOTarget, jain_fairness,
                        weighted_max_min)
@@ -192,14 +191,12 @@ def test_slo_observed_latency_raises_floor():
 def test_fabric_meters_linked_buffer_traffic():
     """Paging traffic shows up as link occupancy on the FM's arbiter."""
     jnp = pytest.importorskip("jax.numpy")
-    from repro.core import LinkedBuffer
-    fm, _ = make_default_fabric(pool_gib=1)
-    fm.bind_host("h0")
-    fm.register_device(DeviceInfo("d0", DeviceClass.PCIE))
-    host = LMBHost(fm, "h0", page_bytes=4096)
-    buf = LinkedBuffer(name="t", device_id="d0", host=host,
-                       page_shape=(8, 8), dtype=jnp.float32,
-                       onboard_pages=2)
+    from repro.core import system_for
+    system = system_for("d0", host_id="h0", pool_gib=1, page_bytes=4096)
+    fm = system.fm
+    buf = system.buffer(name="t", device_id="d0",
+                        page_shape=(8, 8), dtype=jnp.float32,
+                        onboard_pages=2)
     for p in buf.append_pages(6):
         buf.write(p, jnp.ones((8, 8)))
     link = fm.snapshot()["link"]

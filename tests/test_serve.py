@@ -7,19 +7,17 @@ import numpy as np
 import pytest
 
 from repro.configs.base import get_config
-from repro.core import LMBHost, make_default_fabric
-from repro.core.fabric import DeviceClass, DeviceInfo
+from repro.core import system_for
 from repro.models import build_model
 from repro.models.flags import Flags
 from repro.serve import EngineConfig, ServeEngine
 from repro.serve.kv_cache import PagedKVStore
 
 
-def fresh_host(pool_gib=1):
-    fm, _ = make_default_fabric(pool_gib=pool_gib)
-    fm.bind_host("h0")
-    fm.register_device(DeviceInfo("tpu0", DeviceClass.PCIE))
-    return LMBHost(fm, "h0", page_bytes=4096)
+def fresh_system(pool_gib=1):
+    """The serve stack is constructed through the client API."""
+    return system_for("tpu0", host_id="h0", pool_gib=pool_gib,
+                      page_bytes=4096)
 
 
 @pytest.fixture(scope="module")
@@ -36,7 +34,7 @@ def make_engine(served, **kw):
     defaults = dict(decode_slots=2, max_seq_len=64, page_tokens=8,
                     onboard_pages=8, prefill_bucket=16)
     defaults.update(kw)
-    return ServeEngine(model, params, fresh_host(), EngineConfig(
+    return ServeEngine(model, params, fresh_system(), EngineConfig(
         **defaults), qos=qos)
 
 
@@ -106,16 +104,16 @@ def test_preemption_and_resume(served):
 
 def test_prefix_fork_zero_copy(served):
     cfg, model, params = served
-    host = fresh_host()
-    kv = PagedKVStore(cfg=cfg, host=host, device_id="tpu0",
+    system = fresh_system()
+    kv = PagedKVStore(cfg=cfg, system=system, device_id="tpu0",
                       page_tokens=4, onboard_pages=4)
     sid = kv.new_seq()
     L, KV_, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_
     kvdata = jnp.ones((L, 2, 8, KV_, hd), jnp.dtype(cfg.dtype))
     kv.append_tokens(sid, kvdata)
-    held_before = host.owned_bytes("tpu0")
+    held = system.host().owned_bytes("tpu0")
     fork = kv.fork(sid)
-    assert host.owned_bytes("tpu0") == held_before   # no new LMB bytes
+    assert system.host().owned_bytes("tpu0") == held   # no new LMB bytes
     assert kv.seq(fork).length == kv.seq(sid).length
     # writing to the fork triggers COW, original unchanged
     kv.append_tokens(fork, kvdata * 2)
@@ -128,7 +126,7 @@ def test_prefix_fork_zero_copy(served):
 
 def test_page_table_export(served):
     cfg, *_ = served
-    kv = PagedKVStore(cfg=cfg, host=fresh_host(), device_id="tpu0",
+    kv = PagedKVStore(cfg=cfg, system=fresh_system(), device_id="tpu0",
                       page_tokens=4, onboard_pages=4)
     sid = kv.new_seq()
     L, KV_, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_

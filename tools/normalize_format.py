@@ -1,0 +1,84 @@
+"""Mechanical formatting normalization (the ROADMAP "ruff format" item).
+
+Applies the whitespace-level subset of ruff-format's behavior that can be
+done — and *verified* — without the formatter binary (which the dev
+container does not ship): strip trailing whitespace, expand tabs in
+indentation, and end every file with exactly one newline.  Every rewrite
+is gated on ``ast.dump`` equality before/after, so the pass provably
+cannot change program behavior; files whose AST would change are left
+untouched and reported.
+
+Run:  python tools/normalize_format.py [--check] [paths...]
+
+``--check`` exits non-zero if any file would change (CI-friendly); the
+default applies changes in place.  With no paths, walks the repo's
+Python surface (src/ tests/ examples/ benchmarks/ tools/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import sys
+
+DEFAULT_ROOTS = ("src", "tests", "examples", "benchmarks", "tools")
+
+
+def normalize(text: str) -> str:
+    lines = text.split("\n")
+    out = []
+    for line in lines:
+        stripped = line.rstrip()
+        # expandtabs only in leading whitespace (string bodies are
+        # protected by the AST check anyway, but don't even try)
+        indent = stripped[: len(stripped) - len(stripped.lstrip())]
+        if "\t" in indent:
+            stripped = indent.expandtabs(8) + stripped.lstrip()
+        out.append(stripped)
+    result = "\n".join(out)
+    return result.rstrip("\n") + "\n" if result.strip() else ""
+
+
+def process(path: pathlib.Path, check: bool) -> str:
+    """Returns '' (unchanged), 'changed', or 'skipped' (AST mismatch)."""
+    text = path.read_text()
+    new = normalize(text)
+    if new == text:
+        return ""
+    try:
+        if ast.dump(ast.parse(text)) != ast.dump(ast.parse(new)):
+            return "skipped"
+    except SyntaxError:
+        return "skipped"
+    if not check:
+        path.write_text(new)
+    return "changed"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*", default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="report files that would change; exit 1 if any")
+    args = ap.parse_args()
+    roots = [pathlib.Path(p) for p in (args.paths or DEFAULT_ROOTS)]
+    files: list[pathlib.Path] = []
+    for root in roots:
+        if root.is_file():
+            files.append(root)
+        elif root.is_dir():
+            files.extend(sorted(root.rglob("*.py")))
+    changed = 0
+    for f in files:
+        status = process(f, args.check)
+        if status:
+            changed += status == "changed"
+            print(f"{status}: {f}")
+    verb = "would change" if args.check else "normalized"
+    print(f"{verb}: {changed} of {len(files)} files")
+    return 1 if (args.check and changed) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
