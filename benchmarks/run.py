@@ -154,6 +154,71 @@ def bench_migration_sweep() -> None:
          f"util1={rep.utilization.get(1, 0.0):.2f}")
 
 
+# ------------------------------------------- batched data path (gather)
+def bench_gather_sweep() -> None:
+    """Batched vs scalar LMB data path, batch 1 -> 256: per-page gather
+    latency (us_per_call column) and arbiter round-trips, onboard-hit vs
+    LMB-resident working sets.  The LMB-resident cells run a steady-state
+    thrash (two working-set halves, onboard holds one): every gather is
+    all-miss, so scalar pays 2 arbiter calls per page (fault read +
+    eviction write-back) while the batched path coalesces the whole burst
+    into one charge per expander link — the >=5x metering reduction the
+    batched engine exists for."""
+    import jax.numpy as jnp
+    from repro.core import system_for
+    from repro.core.metrics import Metrics
+
+    shape = (64, 64)                      # 16 KiB pages
+    calls_at_64 = {}
+    for resident in ("onboard", "lmb"):
+        for batch in (1, 2, 8, 32, 64, 128, 256):
+            system = system_for("d0", host_id="h0", pool_gib=2,
+                                page_bytes=1 << 16, metrics=Metrics())
+            onboard = batch if resident == "lmb" else 2 * batch
+            buf = system.buffer(
+                name=f"gs.{resident}.{batch}", device_id="d0",
+                page_shape=shape, dtype=jnp.float32,
+                onboard_pages=onboard, lmb_chunk_pages=64,
+                metrics=Metrics())
+            pages = buf.append_pages(2 * batch)
+            for p in pages:
+                buf.write(p, jnp.full(shape, float(p)))
+            half_a, half_b = pages[:batch], pages[batch:]
+            if resident == "onboard":
+                buf.read_many(half_a)     # warm: every gather below hits
+            iters = min(max(4, 64 // batch), 16)
+            for mode in ("scalar", "batched"):
+                for it in range(2):       # warmup: compile both halves
+                    tgt = (half_a if resident == "onboard" or it % 2 == 0
+                           else half_b)
+                    (buf.read_many(tgt) if mode == "batched"
+                     else [buf.read(p) for p in tgt])
+                c0 = system.fm.meter_calls()
+                best = float("inf")       # min-of-iters: robust to noise
+                for it in range(iters):
+                    # lmb case alternates halves -> permanent all-miss
+                    tgt = (half_a if resident == "onboard" or it % 2 == 0
+                           else half_b)
+                    t0 = time.perf_counter()
+                    if mode == "scalar":
+                        for p in tgt:
+                            buf.read(p)
+                    else:
+                        buf.read_many(tgt)
+                    best = min(best, time.perf_counter() - t0)
+                calls = system.fm.meter_calls() - c0
+                if resident == "lmb" and batch == 64:
+                    calls_at_64[mode] = calls
+                _row(f"gather_sweep.{resident}.b{batch:03d}.{mode}",
+                     best / batch * 1e6,
+                     f"meter_calls={calls};pages={iters * batch}")
+            system.close()
+    ratio = calls_at_64["scalar"] / max(calls_at_64["batched"], 1)
+    _row("gather_sweep.meter_reduction.b064", 0.0,
+         f"ratio={ratio:.1f};scalar={calls_at_64['scalar']};"
+         f"batched={calls_at_64['batched']}")
+
+
 # --------------------------------------------------- §4.1.2 locality sweep
 def bench_locality_sweep() -> None:
     """Hot-index hit ratio -> throughput recovery (paper §4.1.2 claim)."""
@@ -282,6 +347,7 @@ BENCHES = {
     "fig6": bench_fig6,
     "fabric_sweep": bench_fabric_sweep,
     "migration_sweep": bench_migration_sweep,
+    "gather_sweep": bench_gather_sweep,
     "locality": bench_locality_sweep,
     "allocator": bench_allocator,
     "offload": bench_offload_overlap,

@@ -10,6 +10,13 @@ host memory, §3.2), then the data path touches exactly one tier.
 
 Capabilities:
   * demand paging with pluggable eviction (LRU/CLOCK/cost-aware) + prefetch
+  * **batched data path** — :meth:`read_many` / :meth:`write_many` resolve
+    the page table up front, group the pages into per-(chunk, expander)
+    runs, and move each run as ONE coalesced transfer with ONE link-arbiter
+    charge for the burst (real CXL/PCIe stacks amortize doorbells and
+    arbitration over bursts; the scalar path pays them per page).  Bulk
+    eviction (:meth:`_evict_many`) frees K onboard slots with one policy
+    call and coalesced per-chunk write-back bursts.
   * dirty tracking with write-back (single-writer "uncached" semantics — the
     paper's PCIe devices don't participate in coherence, and neither do we:
     ownership transfer is explicit)
@@ -25,9 +32,23 @@ Capabilities:
     (per-page absmax scale kept in HOST metadata, like all LMB metadata);
     lossy (~1e-2 relative) — suited to KV caches, not optimizer state
   * **per-page access heat** (exponentially-decayed touch counters fed by
-    the link-metering path) + :meth:`migrate_pages`, the mechanism the
-    MigrationEngine (repro.qos.migration) uses to move hot LMB pages off
-    a saturated expander link onto a cooler one
+    the link-metering path, numpy-backed so batch updates are one
+    vectorized decay instead of a dict walk; decayed-cold entries are
+    flushed to zero so long-lived buffers don't accumulate stale heat)
+    + :meth:`migrate_pages`, the mechanism the MigrationEngine
+    (repro.qos.migration) uses to move hot LMB pages off a saturated
+    expander link onto a cooler one
+
+Batched-vs-scalar equivalence: the batched paths move the same bytes over
+the same links, produce bit-identical page contents, and leave the same
+logical page-table state as the scalar loop.  Two deliberate improvements:
+(1) a batch frees its fault sources *before* allocating eviction
+destinations, so a burst can recycle its own sources' slots — the batch
+never grows more LMB chunks than the scalar interleave, occasionally
+fewer; (2) eviction victims are chosen from the PRE-batch resident set
+(one ``policy.victims(k)`` call), so a gather can never demote its own
+just-faulted members — the scalar interleave could, and under
+CostAwareLRU's clean-page preference routinely did (self-thrash).
 """
 
 from __future__ import annotations
@@ -126,17 +147,25 @@ class LinkedBuffer:
         self._lmb_pools: List[Optional[jax.Array]] = []  # None = reclaimed
         #: per-chunk capability for the backing LMB allocation
         self._lmb_allocs: List[Optional[MemoryHandle]] = []
-        self._lmb_free: List[int] = []            # global lmb slot ids
+        #: per-expander free lists (LIFO): expander id -> free lmb slots.
+        #: Replaces the old flat list whose expander-filtered allocation
+        #: was an O(n) scan — migration placement now pops O(1).
+        self._lmb_free: Dict[int, List[int]] = {}
         self._lmb_owner: Dict[int, int] = {}
         self._lmb_homes: List[int] = []           # chunk -> expander id
         self._lmb_used: List[int] = []            # chunk -> occupied slots
 
         # access heat: exponentially-decayed touch counters, bumped on the
         # link-metering path (every byte a page moves over an expander link
-        # is a vote for migrating it somewhere cooler).  Lazy decay: store
-        # (value, clock-at-touch) and age on read.
+        # is a vote for migrating it somewhere cooler).  Numpy-backed
+        # structure-of-arrays with lazy decay: store (value, clock-at-touch)
+        # per page and age on read; batch touches decay a whole burst in
+        # one vectorized update.  Entries whose decayed value drops below
+        # ``heat_epsilon`` are flushed to zero during batch updates.
         self.heat_decay = 0.95
-        self._heat: Dict[int, Tuple[float, int]] = {}
+        self.heat_epsilon = 1e-4
+        self._heat_val = np.zeros(0, np.float64)
+        self._heat_at = np.zeros(0, np.int64)
         self._heat_clock = 0
 
         self._pages: List[PageEntry] = []
@@ -157,6 +186,18 @@ class LinkedBuffer:
         """Extend the logical buffer by ``n`` zero pages; returns indices."""
         base = len(self._pages)
         self._pages.extend(PageEntry() for _ in range(n))
+        need = len(self._pages)
+        if need > len(self._heat_val):
+            # geometric growth: decode appends one page at a time, and a
+            # copy-per-append would make buffer growth quadratic
+            cap = max(need, 2 * len(self._heat_val), 16)
+            val = np.zeros(cap, np.float64)
+            val[:base] = self._heat_val[:base]
+            at = np.full(cap, self._heat_clock, np.int64)
+            at[:base] = self._heat_at[:base]
+            self._heat_val, self._heat_at = val, at
+        else:
+            self._heat_at[base:need] = self._heat_clock
         return list(range(base, base + n))
 
     def _grow_lmb(self, expander_id: Optional[int] = None) -> None:
@@ -175,43 +216,100 @@ class LinkedBuffer:
         self._lmb_homes.append(handle.expander())
         self._lmb_used.append(0)
         base = chunk_idx * self._lmb_chunk_pages
-        self._lmb_free.extend(range(base, base + self._lmb_chunk_pages))
+        self._lmb_free.setdefault(handle.expander(), []).extend(
+            range(base, base + self._lmb_chunk_pages))
 
     def _lmb_slot_alloc(self, expander_id: Optional[int] = None) -> int:
         """Take a free LMB slot; ``expander_id`` restricts the slot to a
-        chunk homed on that expander (migration placement)."""
+        chunk homed on that expander (migration placement).  O(1) pops
+        from per-expander free lists."""
         if expander_id is None:
-            if not self._lmb_free:
+            slot = None
+            for lst in self._lmb_free.values():
+                if lst:
+                    slot = lst.pop()
+                    break
+            if slot is None:
                 self._grow_lmb()
-            slot = self._lmb_free.pop()
+                slot = next(lst.pop() for lst in self._lmb_free.values()
+                            if lst)
         else:
-            idx = next(
-                (i for i, s in enumerate(self._lmb_free)
-                 if self._lmb_homes[s // self._lmb_chunk_pages]
-                 == expander_id), None)
-            if idx is None:
+            lst = self._lmb_free.get(expander_id)
+            if not lst:
                 self._grow_lmb(expander_id)
-                idx = len(self._lmb_free) - 1
-            slot = self._lmb_free.pop(idx)
+                lst = self._lmb_free[expander_id]
+            slot = lst.pop()
         self._lmb_used[slot // self._lmb_chunk_pages] += 1
         return slot
 
+    def _lmb_slot_alloc_many(self, k: int,
+                             expander_id: Optional[int] = None) -> List[int]:
+        """``k`` free LMB slots as one batch; atomic — on OutOfMemory the
+        already-claimed slots are returned before re-raising."""
+        slots: List[int] = []
+        try:
+            for _ in range(k):
+                slots.append(self._lmb_slot_alloc(expander_id))
+        except OutOfMemory:
+            for s in slots:
+                self._lmb_slot_free(s)
+            raise
+        return slots
+
     def _lmb_slot_free(self, slot: int) -> None:
-        self._lmb_free.append(slot)
+        home = self._lmb_homes[slot // self._lmb_chunk_pages]
+        self._lmb_free.setdefault(home, []).append(slot)
         self._lmb_used[slot // self._lmb_chunk_pages] -= 1
         self._lmb_scales.pop(slot, None)
 
+    # ------------------------------------------------------------------- heat
     def _touch_heat(self, page: int) -> None:
         self._heat_clock += 1
-        val, at = self._heat.get(page, (0.0, self._heat_clock))
-        val *= self.heat_decay ** (self._heat_clock - at)
-        self._heat[page] = (val + 1.0, self._heat_clock)
+        age = self._heat_clock - self._heat_at[page]
+        self._heat_val[page] = (self._heat_val[page]
+                                * self.heat_decay ** age + 1.0)
+        self._heat_at[page] = self._heat_clock
+
+    def _touch_heat_batch(self, pages: Sequence[int]) -> None:
+        """One vectorized decay+bump for a burst of page touches (replaces
+        len(pages) dict walks); then flush decayed-cold entries."""
+        if not pages:
+            return
+        u, counts = np.unique(np.asarray(pages, np.int64),
+                              return_counts=True)
+        self._heat_clock += len(pages)
+        age = self._heat_clock - self._heat_at[u]
+        self._heat_val[u] = (self._heat_val[u]
+                             * self.heat_decay ** age + counts)
+        self._heat_at[u] = self._heat_clock
+        self._flush_cold_heat()
+
+    def _flush_cold_heat(self) -> None:
+        """Zero entries whose decayed heat fell below ``heat_epsilon`` —
+        bounds stale-heat noise in long-lived buffers (the dict-era leak:
+        every page ever touched kept an entry forever)."""
+        n = len(self._pages)
+        if self.heat_epsilon <= 0 or not n:
+            return
+        val, at = self._heat_val[:n], self._heat_at[:n]
+        # restrict the decay computation to live entries: the flush runs
+        # on every metering burst, and a full-array power over a large,
+        # mostly-cold buffer would defeat the lazy-decay design
+        (live,) = np.nonzero(val)
+        if not len(live):
+            return
+        dec = val[live] * self.heat_decay ** (self._heat_clock - at[live])
+        cold = live[dec < self.heat_epsilon]
+        if len(cold):
+            val[cold] = 0.0
+            at[cold] = self._heat_clock
 
     def page_heat(self, page: int) -> float:
         """Decayed touch count: how hot this page runs on the LMB link."""
-        val, at = self._heat.get(page, (0.0, self._heat_clock))
-        return val * self.heat_decay ** (self._heat_clock - at)
+        age = self._heat_clock - self._heat_at[page]
+        return float(self._heat_val[page] * self.heat_decay ** age)
 
+    # ---------------------------------------------------------------- metering
     def _meter_link(self, chunk: Optional[int] = None,
                     page: Optional[int] = None) -> None:
         if page is not None:
@@ -222,6 +320,86 @@ class LinkedBuffer:
             self.link_wait_s += self.host.meter_transfer(
                 self.device_id, self.lmb_page_bytes,
                 mmid=alloc.mmid if alloc is not None else None)
+
+    def _charge_links(self, charges: List[Tuple[int, Optional[int]]],
+                      pages: Sequence[int]) -> None:
+        """Flush a batch's accumulated link charges as one burst: one
+        vectorized heat update, then ONE arbiter call per backing
+        expander (LMBHost.meter_transfer_many merges same-link runs)."""
+        if pages:
+            self._touch_heat_batch(pages)
+        if not self._meter_via_executor and charges:
+            self.link_wait_s += self.host.meter_transfer_many(
+                self.device_id, charges)
+
+    # --------------------------------------------------- coalesced chunk runs
+    def _lmb_read_run(self, chunk: int, offs: Sequence[int]) -> jax.Array:
+        """Coalesced read of several slots of ONE chunk: one access check,
+        one slice gather.  Caller meters (append the run's charge)."""
+        self.host.check_access(self.device_id, self._lmb_allocs[chunk].mmid)
+        data = self.executor.read_pages(self._lmb_pools[chunk], offs)
+        if self.compress_lmb:
+            base = chunk * self._lmb_chunk_pages
+            scales = jnp.asarray(
+                [self._lmb_scales.pop(base + off, 0.0) for off in offs],
+                jnp.float32)
+            scales = scales.reshape((-1,) + (1,) * len(self.page_shape))
+            data = (data.astype(jnp.float32) * scales).astype(self.dtype)
+        return data
+
+    def _lmb_write_run(self, chunk: int, offs: Sequence[int],
+                       data: jax.Array) -> None:
+        """Coalesced write of ``data[i] -> chunk slot offs[i]``: one access
+        check, one slice scatter, vectorized compression.  Caller meters."""
+        self.host.check_access(self.device_id, self._lmb_allocs[chunk].mmid)
+        if self.compress_lmb:
+            f = data.astype(jnp.float32)
+            axes = tuple(range(1, f.ndim))
+            amax = np.asarray(jnp.max(jnp.abs(f), axis=axes),
+                              np.float64) + 1e-12
+            base = chunk * self._lmb_chunk_pages
+            for off, a in zip(offs, amax):
+                self._lmb_scales[base + off] = float(a) / 127.0
+            inv = jnp.asarray(127.0 / amax, jnp.float32)
+            inv = inv.reshape((-1,) + (1,) * len(self.page_shape))
+            data = jnp.clip(jnp.round(f * inv), -127, 127).astype(jnp.int8)
+        self._lmb_pools[chunk] = self.executor.write_pages(
+            self._lmb_pools[chunk], offs, data)
+
+    def _runs_by_chunk(self, slots: Sequence[int]) -> Dict[int, List[int]]:
+        """Group batch positions by the chunk their slot lives in."""
+        runs: Dict[int, List[int]] = {}
+        for i, s in enumerate(slots):
+            runs.setdefault(s // self._lmb_chunk_pages, []).append(i)
+        return runs
+
+    def _read_runs(self, slots: Sequence[int],
+                   charges: List[Tuple[int, Optional[int]]]) -> List:
+        """Read arbitrary LMB slots as coalesced per-chunk runs; returns
+        page data aligned with ``slots`` and appends one link charge per
+        run (the caller flushes the burst)."""
+        data: Dict[int, jax.Array] = {}
+        for chunk, idxs in self._runs_by_chunk(slots).items():
+            offs = [slots[i] % self._lmb_chunk_pages for i in idxs]
+            arr = self._lmb_read_run(chunk, offs)
+            for j, i in enumerate(idxs):
+                data[i] = arr[j]
+            charges.append((len(idxs) * self.lmb_page_bytes,
+                            self._lmb_allocs[chunk].mmid))
+        return [data[i] for i in range(len(slots))]
+
+    def _write_runs(self, slots: Sequence[int], rows,
+                    charges: List[Tuple[int, Optional[int]]]) -> None:
+        """Write ``rows[i] -> slots[i]`` as coalesced per-chunk runs;
+        appends one link charge per run.  ``rows`` is a stacked array or
+        a list of pages."""
+        for chunk, idxs in self._runs_by_chunk(slots).items():
+            offs = [slots[i] % self._lmb_chunk_pages for i in idxs]
+            sub = (rows[np.asarray(idxs)] if hasattr(rows, "ndim")
+                   else jnp.stack([rows[i] for i in idxs]))
+            self._lmb_write_run(chunk, offs, sub)
+            charges.append((len(idxs) * self.lmb_page_bytes,
+                            self._lmb_allocs[chunk].mmid))
 
     def _lmb_read(self, slot: int, page: Optional[int] = None) -> jax.Array:
         chunk, off = divmod(slot, self._lmb_chunk_pages)
@@ -275,6 +453,47 @@ class LinkedBuffer:
         del self._onboard_owner[slot]
         return slot
 
+    def _evict_many(self, k: int,
+                    sink: Optional[Tuple[list, list]] = None) -> List[int]:
+        """Bulk eviction: demote ``k`` victims chosen in ONE policy call,
+        written back as coalesced per-chunk bursts (one slice scatter +
+        one link charge per destination chunk, instead of k round-trips).
+        Returns the freed onboard slots in victim order.  ``sink`` is an
+        optional ``(charges, heat_pages)`` pair a batch caller passes to
+        defer the metering flush to one combined burst."""
+        if k <= 0:
+            return []
+        victims = self.policy.victims(k)
+        if len(victims) < k:
+            raise OutOfMemory(
+                f"{self.name}: onboard tier full and only "
+                f"{len(victims)}/{k} evictable pages "
+                f"(of {self.onboard_pages}; rest pinned)")
+        if self.degraded:
+            raise OutOfMemory(
+                f"{self.name}: degraded mode — working set exceeds onboard "
+                "capacity and the LMB tier is gone")
+        dsts = self._lmb_slot_alloc_many(k)
+        data = self.executor.read_pages(
+            self._onboard_pool, [self._pages[v].slot for v in victims])
+        charges, heat = sink if sink is not None else ([], [])
+        self._write_runs(dsts, data, charges)
+        heat.extend(victims)
+        self.metrics.record_move(self.name, ONBOARD, LMB,
+                                 k * self.lmb_page_bytes)
+        freed: List[int] = []
+        for v, dst in zip(victims, dsts):
+            entry = self._pages[v]
+            slot = entry.slot
+            entry.tier, entry.slot, entry.dirty = LMB, dst, False
+            self._lmb_owner[dst] = v
+            self.policy.on_remove(v)
+            del self._onboard_owner[slot]
+            freed.append(slot)
+        if sink is None:
+            self._charge_links(charges, heat)
+        return freed
+
     def _onboard_slot_alloc(self) -> int:
         if self._onboard_free:
             return self._onboard_free.pop()
@@ -307,31 +526,225 @@ class LinkedBuffer:
         self.policy.on_insert(page)
         if self.prefetcher:
             self.prefetcher.observe(page)
-            for p in self.prefetcher.suggest(self.num_pages - 1):
-                if self._pages[p].tier == LMB and self._onboard_free:
-                    try:
-                        self._prefetch(p)
-                    except OutOfMemory:
-                        break
+            self._prefetch_many(self.prefetcher.suggest(self.num_pages - 1))
         return slot
 
-    def _prefetch(self, page: int) -> None:
-        entry = self._pages[page]
-        if entry.tier != LMB:
+    # --------------------------------------------------------- batched paging
+    def _fault_in_many(self, pages: Sequence[int],
+                       co_resident: bool = False) -> Dict[int, int]:
+        """Batched fault: bring a set of pages onboard with coalesced
+        per-chunk transfers, bulk eviction, and one metering burst.
+        Returns {page: onboard slot}.  The batch's distinct pages must
+        fit the onboard tier at once — every returned slot is live when
+        the caller gathers/scatters through it (read_many/write_many
+        wave LARGER batches themselves, capturing each wave's data
+        before the next may evict it); an oversized fault raises
+        OutOfMemory from the eviction shortfall.  Pages already onboard
+        are guarded against the batch's own evictions — a burst is one
+        access epoch, so its hits must still be resident on return.
+        ``co_resident`` additionally pre-checks the whole batch fits
+        (the pin contract), raising like the scalar pin loop did when
+        it ran out of evictable slots."""
+        slots: Dict[int, int] = {}
+        faulting: List[int] = []
+        hits: List[int] = []
+        deferred: List[int] = []
+        missed = set()
+        for p in pages:
+            self._check(p)
+            entry = self._pages[p]
+            if entry.tier == ONBOARD or p in missed:
+                # second+ occurrence of a faulting page counts as a hit,
+                # exactly like the scalar loop's repeat read would
+                self.metrics.record_hit(self.name, ONBOARD, self.page_bytes)
+                if p in missed:
+                    # recency bump must land AFTER the page is inserted
+                    # into the policy (scalar order: insert, then the
+                    # repeat read's access) — fired post-wave below
+                    deferred.append(p)
+                else:
+                    self.policy.on_access(p)
+                    slots[p] = entry.slot
+                    hits.append(p)
+            else:
+                self.metrics.record_miss(self.name, ONBOARD,
+                                         self.page_bytes)
+                missed.add(p)
+                faulting.append(p)
+        if co_resident:
+            distinct = len(missed) + len(set(hits))
+            avail = self._batch_capacity(list(missed) + hits)
+            if distinct > avail:
+                raise OutOfMemory(
+                    f"{self.name}: batch of {distinct} pages cannot "
+                    f"co-reside in the onboard tier ({avail} of "
+                    f"{self.onboard_pages} slots unpinned)")
+        # guard this batch's hit pages against its own evictions: the
+        # caller reads/writes through slots[] after we return.  Pin via
+        # the public API (a policy may mirror pins into its own
+        # structures); _pinned() is only consulted to avoid releasing a
+        # caller's pre-existing pin
+        guard = [p for p in dict.fromkeys(hits)
+                 if p not in self.policy._pinned()]
+        for p in guard:
+            self.policy.pin(p)
+        try:
+            self._fault_wave(faulting)
+        finally:
+            for p in guard:
+                self.policy.unpin(p)
+        for p in deferred:
+            self.policy.on_access(p)
+        for p in faulting:
+            slots[p] = self._pages[p].slot
+        return slots
+
+    def _fault_wave(self, faulting: List[int]) -> None:
+        """One capacity-bounded wave of the batched fault path: coalesced
+        LMB reads per source chunk, bulk eviction for the shortfall, one
+        coalesced onboard scatter, one metering burst."""
+        if not faulting:
             return
-        if not self._onboard_free:
-            return  # never evict to prefetch
-        slot = self._onboard_free.pop()
-        data = self._lmb_read(entry.slot, page)
-        self._onboard_pool = self.executor.write_page(
-            self._onboard_pool, slot, data)
+        charges: List[Tuple[int, Optional[int]]] = []
+        heat: List[int] = []
+        # 1. coalesced reads of LMB-resident sources, then free their
+        # slots — freeing BEFORE the eviction allocates destinations lets
+        # the burst recycle its own sources (never grows more chunks than
+        # the scalar interleave would)
+        lmb_pages = [p for p in faulting if self._pages[p].tier == LMB]
+        src_slots = [self._pages[p].slot for p in lmb_pages]
+        # snapshot (page, slot, scale) so a failed eviction below can
+        # restore the sources (pool contents stay valid until step 4)
+        src_saved = [(p, s, self._lmb_scales.get(s))
+                     for p, s in zip(lmb_pages, src_slots)]
+        data = dict(zip(lmb_pages, self._read_runs(src_slots, charges)))
+        heat.extend(lmb_pages)
+        for p in lmb_pages:
+            entry = self._pages[p]
+            self._lmb_slot_free(entry.slot)
+            self._lmb_owner.pop(entry.slot, None)
+        # 2. bulk-evict the shortfall (coalesced write-back, shared burst)
+        try:
+            freed = self._evict_many(
+                len(faulting) - len(self._onboard_free),
+                sink=(charges, heat))
+        except OutOfMemory:
+            # eviction failed before any pool write: re-claim the exact
+            # source slots so every page keeps its pre-call state — but
+            # the source reads DID move bytes over the link, so flush
+            # their charges first (the scalar path metered each read
+            # before failing too)
+            self._charge_links(charges, heat)
+            for p, slot, scale in src_saved:
+                home = self._lmb_homes[slot // self._lmb_chunk_pages]
+                self._lmb_free[home].remove(slot)
+                self._lmb_used[slot // self._lmb_chunk_pages] += 1
+                if scale is not None:
+                    self._lmb_scales[slot] = scale
+                self._lmb_owner[slot] = p
+            raise
+        if lmb_pages:
+            self.metrics.record_move(self.name, LMB, ONBOARD,
+                                     len(lmb_pages) * self.lmb_page_bytes)
+        # 3. assign slots: free list (LIFO, scalar order) first, then the
+        # eviction-freed slots in victim order
+        assigned = [self._onboard_free.pop() if self._onboard_free
+                    else freed.pop(0) for _ in faulting]
+        # 4. one coalesced onboard scatter (zeros for first-touch pages)
+        zero = jnp.zeros(self.page_shape, self.dtype)
+        batch = jnp.stack([data.get(p, zero) for p in faulting])
+        self._onboard_pool = self.executor.write_pages(
+            self._onboard_pool, assigned, batch)
+        for p, slot in zip(faulting, assigned):
+            entry = self._pages[p]
+            entry.tier, entry.slot, entry.dirty = ONBOARD, slot, False
+            self._onboard_owner[slot] = p
+            self.policy.on_insert(p)
+        self._charge_links(charges, heat)
+        if self.prefetcher:
+            for p in faulting:
+                self.prefetcher.observe(p)
+            self._prefetch_many(self.prefetcher.suggest(self.num_pages - 1))
+
+    def _batch_capacity(self, batch: Sequence[int] = ()) -> int:
+        """Onboard slots a batch can actually occupy: the tier minus
+        pages pinned OUTSIDE the batch.  The scalar loop could thrash a
+        working set through whatever unpinned remainder existed, one
+        page at a time — batch waves must size to the same remainder or
+        a gather under pin pressure would spuriously raise."""
+        members = set(batch)
+        pinned = sum(1 for p in self.policy._pinned()
+                     if p not in members and 0 <= p < len(self._pages)
+                     and self._pages[p].tier == ONBOARD)
+        return max(self.onboard_pages - pinned, 1)
+
+    def _record_dup_hits(self, page: int, n: int) -> None:
+        """Account ``n`` duplicate occurrences of a single-page burst as
+        onboard hits, like the scalar loop's repeat reads would."""
+        for _ in range(n):
+            self.metrics.record_hit(self.name, ONBOARD, self.page_bytes)
+            self.policy.on_access(page)
+
+    def _single_wave_fits(self, order: Sequence[int]) -> bool:
+        """Whether the whole batch can co-reside onboard right now:
+        pinned-resident members already hold their slots; the rest must
+        fit in the unpinned remainder."""
+        pinned = self.policy._pinned()
+        member_pins = sum(1 for p in order if p in pinned
+                          and self._pages[p].tier == ONBOARD)
+        all_pins = sum(1 for p in pinned
+                       if 0 <= p < len(self._pages)
+                       and self._pages[p].tier == ONBOARD)
+        return (len(order) - member_pins
+                <= max(self.onboard_pages - all_pins, 0))
+
+    def _iter_waves(self, pages: Sequence[int], order: Sequence[int]):
+        """Split a too-large batch into processable waves, yielding
+        ``(wave, occ)`` — the wave's distinct pages and their duplicate-
+        preserving occurrences.  Pinned-resident members go first (pure
+        hits, no eviction needed); the rest waves through the unpinned
+        capacity, recomputed each round since a wave may fault a pinned
+        page onboard."""
+        remaining = list(order)
+        while remaining:
+            pinned = self.policy._pinned()
+            wave = [p for p in remaining if p in pinned
+                    and self._pages[p].tier == ONBOARD]
+            if not wave:
+                wave = remaining[:self._batch_capacity()]
+            members = set(wave)
+            yield wave, [p for p in pages if p in members]
+            remaining = [p for p in remaining if p not in members]
+
+    def _prefetch(self, page: int) -> None:
+        self._prefetch_many([page])
+
+    def _prefetch_many(self, pages: Sequence[int]) -> None:
+        """Opportunistic LMB->onboard copies bounded by FREE onboard slots
+        (never evicts to prefetch), moved as coalesced per-chunk runs with
+        one metering burst."""
+        cands = [p for p in dict.fromkeys(pages)
+                 if 0 <= p < len(self._pages)
+                 and self._pages[p].tier == LMB]
+        cands = cands[:len(self._onboard_free)]
+        if not cands:
+            return
+        charges: List[Tuple[int, Optional[int]]] = []
+        src_slots = [self._pages[p].slot for p in cands]
+        data = self._read_runs(src_slots, charges)
         self.metrics.record_move(self.name, LMB, ONBOARD,
-                                 self.lmb_page_bytes)
-        self._lmb_slot_free(entry.slot)
-        self._lmb_owner.pop(entry.slot, None)
-        entry.tier, entry.slot, entry.dirty = ONBOARD, slot, False
-        self._onboard_owner[slot] = page
-        self.policy.on_insert(page)
+                                 len(cands) * self.lmb_page_bytes)
+        assigned = [self._onboard_free.pop() for _ in cands]
+        self._onboard_pool = self.executor.write_pages(
+            self._onboard_pool, assigned, jnp.stack(data))
+        for p, slot in zip(cands, assigned):
+            entry = self._pages[p]
+            self._lmb_slot_free(entry.slot)
+            self._lmb_owner.pop(entry.slot, None)
+            entry.tier, entry.slot, entry.dirty = ONBOARD, slot, False
+            self._onboard_owner[slot] = p
+            self.policy.on_insert(p)
+        self._charge_links(charges, cands)
 
     # ------------------------------------------------------------------- API
     def read(self, page: int) -> jax.Array:
@@ -356,9 +769,79 @@ class LinkedBuffer:
         if hasattr(self.policy, "mark_dirty"):
             self.policy.mark_dirty(page, True)
 
+    def read_many(self, pages: Sequence[int]) -> jax.Array:
+        """Batched :meth:`read`: fault the pages in with coalesced
+        per-chunk transfers and bulk eviction, then return them stacked
+        ``[len(pages), *page_shape]`` via one gather against the onboard
+        pool.  Duplicates allowed.  Batches larger than the onboard tier
+        are served in capacity-sized waves."""
+        pages = list(pages)
+        if not pages:
+            return jnp.zeros((0, *self.page_shape), self.dtype)
+        order = list(dict.fromkeys(pages))
+        if len(order) == 1:
+            # a 1-page "burst" IS the scalar path (same bytes, same
+            # single-digit arbiter calls) minus the gather machinery;
+            # data[None] over jnp.stack keeps the decode path at true
+            # scalar dispatch cost
+            data = self.read(order[0])
+            self._record_dup_hits(order[0], len(pages) - 1)
+            if len(pages) == 1:
+                return data[None]
+            return jnp.stack([data] * len(pages))
+        if self._single_wave_fits(order):
+            slotmap = self._fault_in_many(pages)
+            return self.executor.read_pages(
+                self._onboard_pool, [slotmap[p] for p in pages])
+        # batch exceeds the batch-usable onboard capacity: wave through,
+        # capturing each wave's data before the next wave may evict it
+        datas: Dict[int, jax.Array] = {}
+        for wave, occ in self._iter_waves(pages, order):
+            slotmap = self._fault_in_many(occ)
+            arr = self.executor.read_pages(
+                self._onboard_pool, [slotmap[p] for p in wave])
+            for j, p in enumerate(wave):
+                datas[p] = arr[j]
+        return jnp.stack([datas[p] for p in pages])
+
+    def write_many(self, pages: Sequence[int], data) -> None:
+        """Batched :meth:`write`: ``data[i]`` -> ``pages[i]`` with one
+        coalesced onboard scatter after a batched fault (duplicate pages:
+        last write wins, like the scalar loop)."""
+        pages = list(pages)
+        data = jnp.asarray(data, self.dtype)
+        if data.shape != (len(pages), *self.page_shape):
+            raise ValueError(
+                f"{self.name}: batch shape {data.shape} != "
+                f"{(len(pages), *self.page_shape)}")
+        for p in dict.fromkeys(pages):
+            self._check(p)
+            if self._pages[p].refcount > 1:
+                self._cow(p)
+        order = list(dict.fromkeys(pages))
+        last = {p: i for i, p in enumerate(pages)}
+        if len(order) == 1:
+            self.write(order[0], data[last[order[0]]])
+            self._record_dup_hits(order[0], len(pages) - 1)
+            return
+        for wave, occ in self._iter_waves(pages, order):
+            slotmap = self._fault_in_many(occ)
+            self._onboard_pool = self.executor.write_pages(
+                self._onboard_pool, [slotmap[p] for p in wave],
+                data[np.asarray([last[p] for p in wave])])
+            # dirty-mark per wave: a later wave may evict these pages,
+            # and eviction must observe (and clear) their dirty state
+            # exactly as the scalar interleave would
+            for p in wave:
+                self._pages[p].dirty = True
+                if hasattr(self.policy, "mark_dirty"):
+                    self.policy.mark_dirty(p, True)
+
     def gather(self, pages: Sequence[int]) -> jax.Array:
-        """Stack several logical pages (faulting them in) — kernel feed."""
-        return jnp.stack([self.read(p) for p in pages])
+        """Stack several logical pages (faulting them in) — kernel feed.
+        Built on :meth:`read_many`: coalesced transfers, bulk eviction,
+        one arbiter charge per touched expander link."""
+        return self.read_many(pages)
 
     def pin(self, page: int) -> None:
         self._fault_in(page)
@@ -367,14 +850,23 @@ class LinkedBuffer:
     def unpin(self, page: int) -> None:
         self.policy.unpin(page)
 
+    def pin_many(self, pages: Sequence[int]) -> None:
+        """Batched :meth:`pin`: one coalesced fault burst, then pin.
+        Raises OutOfMemory when the pages cannot all co-reside onboard
+        (the scalar pin loop raised once pins exhausted the tier; a
+        silent partial pin would hand the DMA scheduler LMB slots)."""
+        self._fault_in_many(pages, co_resident=True)
+        for p in dict.fromkeys(pages):
+            self.policy.pin(p)
+
+    def unpin_many(self, pages: Sequence[int]) -> None:
+        for p in dict.fromkeys(pages):
+            self.policy.unpin(p)
+
     def schedule_prefetch(self, pages: Sequence[int]) -> None:
         if self.prefetcher:
             self.prefetcher.schedule(list(pages))
-            for p in list(pages)[: self.prefetcher.depth]:
-                try:
-                    self._prefetch(p)
-                except OutOfMemory:
-                    break
+            self._prefetch_many(list(pages)[: self.prefetcher.depth])
 
     # ------------------------------------------------------------- share / COW
     def share(self, page: int) -> int:
@@ -382,6 +874,15 @@ class LinkedBuffer:
         self._check(page)
         self._pages[page].refcount += 1
         return page
+
+    def share_many(self, pages: Sequence[int]) -> List[int]:
+        """Batched :meth:`share` (one call for a whole sequence fork)."""
+        out = []
+        for p in pages:
+            self._check(p)
+            self._pages[p].refcount += 1
+            out.append(p)
+        return out
 
     def release(self, page: int) -> None:
         """Refcount--; frees storage at zero."""
@@ -438,7 +939,13 @@ class LinkedBuffer:
                       expander_id: Optional[int] = None,
                       min_heat: float = 0.0) -> List[int]:
         """LMB-resident pages by descending access heat — the migration
-        candidates for one saturated expander."""
+        candidates for one saturated expander.  One vectorized decay over
+        the heat arrays instead of a per-page dict walk."""
+        if not self._pages:
+            return []
+        n = len(self._pages)
+        dec = (self._heat_val[:n]
+               * self.heat_decay ** (self._heat_clock - self._heat_at[:n]))
         cands = []
         for p, e in enumerate(self._pages):
             if e.tier != LMB:
@@ -446,7 +953,7 @@ class LinkedBuffer:
             if (expander_id is not None
                     and self.page_expander(p) != expander_id):
                 continue
-            h = self.page_heat(p)
+            h = float(dec[p])
             if h < min_heat:
                 continue
             cands.append((h, p))
@@ -456,46 +963,66 @@ class LinkedBuffer:
     def migrate_pages(self, pages: Sequence[int], dst_expander: int) -> int:
         """Move LMB-resident pages onto chunks homed on ``dst_expander``.
 
-        Contents are preserved (read from the source chunk, written to the
-        destination chunk); both links are metered, so migration traffic is
-        visible as occupancy on each side.  Source chunks left empty are
-        reclaimed, which frees their allocation and revokes the device's
-        SAT/IOMMU entries on the source blocks — the destination grant was
-        authorized when its chunk was allocated (the failover re-grant
-        machinery).  Returns the number of pages actually moved: when the
-        destination refuses growth (quota or pool exhausted) the batch
-        stops early with every remaining page intact on its source."""
-        moved = 0
-        for page in pages:
+        Contents are preserved (read from the source chunks, written to
+        the destination chunks — coalesced per-chunk runs, one arbiter
+        charge per touched link instead of per page); both links are
+        metered, so migration traffic is visible as occupancy on each
+        side.  Source chunks left empty are reclaimed, which frees their
+        allocation and revokes the device's SAT/IOMMU entries on the
+        source blocks — the destination grant was authorized when its
+        chunk was allocated (the failover re-grant machinery).  Returns
+        the number of pages actually moved: when the destination refuses
+        growth (quota or pool exhausted) the batch stops early with every
+        remaining page intact on its source."""
+        movers: List[int] = []
+        # dedupe: the scalar loop skipped a repeated page because its
+        # home had already changed by the second occurrence
+        for page in dict.fromkeys(pages):
             self._check(page)
             entry = self._pages[page]
             if entry.tier != LMB:
                 continue
-            src_slot = entry.slot
-            src_home = self._lmb_homes[src_slot // self._lmb_chunk_pages]
+            src_home = self._lmb_homes[entry.slot // self._lmb_chunk_pages]
             if src_home == dst_expander:
                 continue
-            # allocate the destination FIRST: an OutOfMemory (quota, full
-            # pool) must fire before the source page is touched — with
-            # compress_lmb a read pops the source's scale, so failing
-            # mid-move would corrupt the page
+            movers.append(page)
+        # claim every destination slot FIRST: an OutOfMemory (quota, full
+        # pool) must fire before any source page is touched — with
+        # compress_lmb a read pops the source's scale, so failing
+        # mid-move would corrupt the page.  A refusal truncates the batch
+        # to the prefix that got slots (scalar stop-early semantics).
+        dsts: List[int] = []
+        for _ in movers:
             try:
-                dst_slot = self._lmb_slot_alloc(expander_id=dst_expander)
+                dsts.append(self._lmb_slot_alloc(expander_id=dst_expander))
             except OutOfMemory:
                 break
-            data = self._lmb_read(src_slot, None)       # meters source link
-            self._lmb_write(dst_slot, data, None)       # meters dest link
-            entry.slot = dst_slot
-            self._lmb_owner[dst_slot] = page
-            self._lmb_owner.pop(src_slot, None)
-            self._lmb_slot_free(src_slot)
-            self.metrics.record_move(self.name, f"{LMB}@{src_home}",
+        movers = movers[:len(dsts)]
+        if not movers:
+            return 0
+        charges: List[Tuple[int, Optional[int]]] = []
+        src_slots = [self._pages[p].slot for p in movers]
+        src_homes = [self._lmb_homes[s // self._lmb_chunk_pages]
+                     for s in src_slots]
+        data = self._read_runs(src_slots, charges)     # meters source links
+        self._write_runs(dsts, data, charges)          # meters dest link
+        # scalar parity: migration traffic does NOT bump access heat
+        self._charge_links(charges, [])
+        moved_by_home: Dict[int, int] = {}
+        for i, page in enumerate(movers):
+            entry = self._pages[page]
+            entry.slot = dsts[i]
+            self._lmb_owner[dsts[i]] = page
+            self._lmb_owner.pop(src_slots[i], None)
+            self._lmb_slot_free(src_slots[i])
+            moved_by_home[src_homes[i]] = moved_by_home.get(
+                src_homes[i], 0) + 1
+        for home, n in moved_by_home.items():
+            self.metrics.record_move(self.name, f"{LMB}@{home}",
                                      f"{LMB}@{dst_expander}",
-                                     self.lmb_page_bytes)
-            moved += 1
-        if moved:
-            self._reclaim_empty_chunks()
-        return moved
+                                     n * self.lmb_page_bytes)
+        self._reclaim_empty_chunks()
+        return len(movers)
 
     def _reclaim_empty_chunks(self) -> None:
         """Free fully-empty LMB chunks back through the Table-2 API (which
@@ -505,9 +1032,11 @@ class LinkedBuffer:
             if used != 0 or self._lmb_pools[chunk] is None:
                 continue
             base = chunk * self._lmb_chunk_pages
-            self._lmb_free = [
-                s for s in self._lmb_free
-                if not base <= s < base + self._lmb_chunk_pages]
+            home = self._lmb_homes[chunk]
+            if home in self._lmb_free:
+                self._lmb_free[home] = [
+                    s for s in self._lmb_free[home]
+                    if not base <= s < base + self._lmb_chunk_pages]
             self._lmb_allocs[chunk].free()
             self._lmb_pools[chunk] = None
             self._lmb_allocs[chunk] = None
@@ -539,7 +1068,7 @@ class LinkedBuffer:
                 e.tier, e.slot, e.dirty = None, -1, False
         self._lmb_owner.clear()
         self._lmb_scales.clear()
-        self._lmb_free = []
+        self._lmb_free = {}
 
     # ------------------------------------------------------------ failure path
     def _on_failover(self, expander_id: Optional[int] = None) -> None:
@@ -567,8 +1096,10 @@ class LinkedBuffer:
         for slot in [s for s in self._lmb_scales
                      if s // self._lmb_chunk_pages in dead]:
             del self._lmb_scales[slot]
-        self._lmb_free = [s for s in self._lmb_free
-                          if s // self._lmb_chunk_pages not in dead]
+        self._lmb_free = {
+            eid: [s for s in lst
+                  if s // self._lmb_chunk_pages not in dead]
+            for eid, lst in self._lmb_free.items()}
         for chunk in dead:
             # the FM re-granted the underlying blocks blank; the old
             # allocation bookkeeping is unrecoverable, so drop references
@@ -597,9 +1128,15 @@ class LinkedBuffer:
         assert len(lmb_slots) == len(set(lmb_slots)), "lmb slot aliasing"
         alive = [c for c, p in enumerate(self._lmb_pools) if p is not None]
         total_lmb = len(alive) * self._lmb_chunk_pages
-        assert len(lmb_slots) + len(self._lmb_free) == total_lmb, \
+        free_flat = [s for lst in self._lmb_free.values() for s in lst]
+        assert len(free_flat) == len(set(free_flat)), "free slot aliasing"
+        assert len(lmb_slots) + len(free_flat) == total_lmb, \
             "lmb slot leak"
-        for slot in lmb_slots + self._lmb_free:
+        for eid, lst in self._lmb_free.items():
+            for s in lst:
+                assert self._lmb_homes[s // self._lmb_chunk_pages] == eid, \
+                    "free-list home drift"
+        for slot in lmb_slots + free_flat:
             assert self._lmb_pools[slot // self._lmb_chunk_pages] \
                 is not None, "slot points at reclaimed chunk"
         for chunk in alive:
@@ -610,6 +1147,7 @@ class LinkedBuffer:
         for slot, page in self._onboard_owner.items():
             e = self._pages[page]
             assert e.tier == ONBOARD and e.slot == slot, "owner map stale"
+        assert len(self._heat_val) >= len(self._pages), "heat array drift"
 
     def stats(self) -> dict:
         tiers = {ONBOARD: 0, LMB: 0, "unmaterialized": 0}

@@ -386,6 +386,14 @@ class FabricManager:
             arb = self.arbiter
         return arb.meter(device_id, nbytes)
 
+    def meter_calls(self) -> int:
+        """Total arbitration round-trips across every expander's link —
+        the overhead metric the batched data path minimizes (bytes move
+        in coalesced bursts, so call count grows with batches, not
+        pages).  Counts frozen (failed) arbiters too: their historical
+        calls happened."""
+        return sum(arb.meter_calls for arb in self._arbiters.values())
+
     def link_utilization(self, expander_id: Optional[int] = None) -> float:
         """One expander's EWMA link utilization, or the pool-wide max
         (the pressure signal consumers degrade on).  Failed expanders'

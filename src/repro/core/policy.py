@@ -33,6 +33,27 @@ class EvictionPolicy(abc.ABC):
     @abc.abstractmethod
     def victim(self) -> Optional[Hashable]: ...
 
+    def victims(self, k: int) -> List[Hashable]:
+        """Up to ``k`` distinct eviction victims in ONE policy call — the
+        bulk-eviction hook for batched faults.  The default reproduces
+        ``k`` successive victim()/on_remove() selections without mutating
+        residency bookkeeping (chosen keys are temporarily pinned so the
+        next victim() pick skips them); policies with cheap ordered state
+        may override with a direct scan."""
+        chosen: List[Hashable] = []
+        pinned = self._pinned()
+        try:
+            for _ in range(max(k, 0)):
+                v = self.victim()
+                if v is None:
+                    break
+                chosen.append(v)
+                pinned.add(v)
+        finally:
+            for v in chosen:
+                pinned.discard(v)
+        return chosen
+
     def pin(self, key: Hashable) -> None:
         self._pinned().add(key)
 
@@ -65,6 +86,18 @@ class LRU(EvictionPolicy):
             if key not in self._pinned():
                 return key
         return None
+
+    def victims(self, k: int) -> List[Hashable]:
+        # one ordered scan = the first k unpinned keys, exactly what k
+        # successive victim()+on_remove() rounds would pick
+        pinned = self._pinned()
+        out: List[Hashable] = []
+        for key in self._order:
+            if len(out) >= k:
+                break
+            if key not in pinned:
+                out.append(key)
+        return out
 
 
 class Clock(EvictionPolicy):
@@ -144,6 +177,18 @@ class CostAwareLRU(LRU):
             if key not in self._dirty:
                 return key
         return super().victim()
+
+    def victims(self, k: int) -> List[Hashable]:
+        # clean pages in LRU order first, then dirty — the order k
+        # successive victim() rounds would produce
+        pinned = self._pinned()
+        clean: List[Hashable] = []
+        dirty: List[Hashable] = []
+        for key in self._order:
+            if key in pinned:
+                continue
+            (dirty if key in self._dirty else clean).append(key)
+        return (clean + dirty)[:k]
 
 
 def make_policy(name: str) -> EvictionPolicy:

@@ -44,6 +44,16 @@ from repro.sharding.partition import (batch_spec, cache_shardings,
 from repro.train.loop import abstract_train_state, make_train_step
 
 
+def _cost_dict(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions: older
+    releases return ``[{...}]`` (one dict per device program), newer ones
+    the dict itself, and some backends ``None``."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def opt_state_shardings(opt_shapes, mesh, cfg, fsdp=False):
     """m/v/master shard like params; scalars replicated."""
     out = {}
@@ -126,7 +136,7 @@ def _measure(cfg, shape, mesh, flags) -> Dict[str, float]:
     t_lower = time.monotonic() - t0
     compiled = lowered.compile()
     t_compile = time.monotonic() - t0 - t_lower
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     out = {
         "flops": float(cost.get("flops", 0.0)),
@@ -200,7 +210,7 @@ def _inner_chunk_cost(cfg, shape, mesh, flags) -> Dict[str, float]:
         else:
             return {"flops": 0.0, "bytes": 0.0, "coll": 0.0}
         compiled = fn.lower(*args).compile()
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled)
         results.append({
             "flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),

@@ -12,7 +12,14 @@ two ways, matching how the Fabric Manager uses it:
   * **metering** — :meth:`LinkArbiter.meter` charges an individual transfer
     against the tenant's token bucket and the shared wire, returning the
     modeled delay.  Used on LinkedBuffer's demote/fault paths so paging
-    traffic shows up as link occupancy.
+    traffic shows up as link occupancy.  ``nbytes`` is arbitrary, so a
+    coalesced multi-page burst is ONE meter call with the burst's total
+    bytes — fairness accounting is byte-denominated (token bucket +
+    weighted refill), so a burst charge is exactly equivalent to N
+    back-to-back page charges, minus N-1 arbiter round-trips.
+    :attr:`LinkArbiter.meter_calls` counts the round-trips, which is how
+    the ``gather_sweep`` benchmark proves the batched data path amortizes
+    arbitration (doorbells, in hardware terms) over bursts.
 
 Time here is *virtual* (deterministic, driven by metered transfers), so
 tests and the simulator get exact, reproducible schedules — no wall clock.
@@ -103,6 +110,10 @@ class LinkArbiter:
         self._busy_accum_s = 0.0
         self._prev_completion_s = 0.0
         self._util_ewma = 0.0
+        #: arbitration round-trips (one per meter() call, whatever the
+        #: burst size) — the per-transfer overhead the batched data path
+        #: amortizes; NOT bytes (those are in TenantState.bytes_total)
+        self.meter_calls = 0
 
     # -- tenant management ---------------------------------------------------
     def register(self, tenant_id: str, weight: float = 1.0,
@@ -153,6 +164,7 @@ class LinkArbiter:
         link bandwidth.
         """
         st = self._tenant(tenant_id)
+        self.meter_calls += 1
         now = self._now_s if now_s is None else max(now_s, self._now_s)
         self._now_s = now
         token_ready = now
@@ -207,6 +219,7 @@ class LinkArbiter:
             "link_bandwidth_Bps": self.link_bandwidth_Bps,
             "utilization_ewma": self._util_ewma,
             "utilization_cumulative": self.cumulative_utilization(),
+            "meter_calls": self.meter_calls,
             "tenants": {
                 t: {"weight": s.weight, "bytes_total": s.bytes_total,
                     "busy_s": s.busy_s, "wait_s": s.wait_s}

@@ -251,5 +251,8 @@ class ServeEngine:
                 "block_placement": fm.placement(),
                 "kv_page_placement": self.kv.buf.lmb_placement(),
                 "link_utilization": fm.link_utilizations(),
+                # arbitration round-trips: grows with coalesced bursts,
+                # not pages — the batched-data-path health signal
+                "meter_calls": fm.meter_calls(),
             },
         }

@@ -88,37 +88,63 @@ class PagedKVStore:
 
     def fork(self, sid: int) -> int:
         """Zero-copy prefix share: new sequence maps the same pages (COW
-        on write) — the Table-2 ``share`` scenario."""
+        on write) — the Table-2 ``share`` scenario.  One batched
+        ``share_many`` call for the whole prefix."""
         new = self.new_seq()
         src = self._seqs[sid]
         dst = self._seqs[new]
-        dst.pages = [self.buf.share(p) for p in src.pages]
+        dst.pages = self.buf.share_many(src.pages)
         dst.length = src.length
         return new
 
     # ------------------------------------------------------------ data path
     def append_tokens(self, sid: int, kv: jax.Array) -> None:
-        """kv [L, 2, T, KV, hd] for T new tokens (T <= page_tokens each
-        call from decode; prefill calls in page-sized slabs)."""
+        """kv [L, 2, T, KV, hd] for T new tokens (T <= page_tokens from
+        decode; prefill calls in page-sized slabs).  Batched data path:
+        the touched pages are planned up front, faulted in with ONE
+        ``read_many`` burst, updated, and written back with ONE
+        ``write_many`` burst — a multi-page prefill slab costs one
+        coalesced transfer per LMB chunk instead of a read/write pair
+        per page."""
         seq = self._seqs[sid]
         T = kv.shape[2]
-        done = 0
+        if T == 0:
+            return                        # empty slab: scalar loop no-op
+        # plan the page segments this slab touches
+        segs = []                         # (page, token offset, take, src)
+        done, length = 0, seq.length
         while done < T:
-            off = seq.length % self.page_tokens
+            off = length % self.page_tokens
             if off == 0:
                 seq.pages.extend(self.buf.append_pages(1))
-            page = seq.pages[-1]
+            page = seq.pages[length // self.page_tokens]
             take = min(self.page_tokens - off, T - done)
-            cur = self.buf.read(page)
-            cur = jax.lax.dynamic_update_slice_in_dim(
-                cur, kv[:, :, done:done + take], off, axis=2)
-            self.buf.write(page, cur)
-            seq.length += take
+            segs.append((page, off, take, done))
+            length += take
             done += take
+        if len(segs) == 1:
+            # decode path: one page per token — plain scalar read/write,
+            # no stack/batch machinery on the hottest per-token path
+            page, off, take, _ = segs[0]
+            cur = self.buf.read(page)
+            self.buf.write(page, jax.lax.dynamic_update_slice_in_dim(
+                cur, kv, off, axis=2))
+            seq.length = length
+            return
+        pages = [s[0] for s in segs]
+        cur = self.buf.read_many(pages)        # one coalesced fault burst
+        updated = [
+            jax.lax.dynamic_update_slice_in_dim(
+                cur[i], kv[:, :, done:done + take], off, axis=2)
+            for i, (page, off, take, done) in enumerate(segs)]
+        self.buf.write_many(pages, jnp.stack(updated))
+        seq.length = length
 
     def gather_seq(self, sid: int) -> jax.Array:
         """Materialize a sequence's KV [L, 2, len_padded, KV, hd] onboard
-        (used for swap-in to a dense decode slot)."""
+        (used for swap-in to a dense decode slot).  ``gather`` rides the
+        batched path: one coalesced transfer per LMB chunk and one
+        arbiter charge per expander link for the whole sequence."""
         seq = self._seqs[sid]
         if not seq.pages:
             return jnp.zeros(self.page_shape, self.buf.dtype)[:, :, :0]
@@ -128,12 +154,12 @@ class PagedKVStore:
         return jnp.moveaxis(stacked, 0, 2).reshape(L, 2, n * T, KV, hd)
 
     def pin_seq(self, sid: int) -> None:
-        for p in self._seqs[sid].pages:
-            self.buf.pin(p)
+        """Pin a sequence's pages onboard with ONE batched fault burst
+        (a compiled step is about to DMA them)."""
+        self.buf.pin_many(self._seqs[sid].pages)
 
     def unpin_seq(self, sid: int) -> None:
-        for p in self._seqs[sid].pages:
-            self.buf.unpin(p)
+        self.buf.unpin_many(self._seqs[sid].pages)
 
     def schedule_swap_in(self, sid: int) -> None:
         self.buf.schedule_prefetch(self._seqs[sid].pages)

@@ -49,9 +49,10 @@ def test_requests_complete(served):
     # pooled-fabric placement surfaces in the engine snapshot
     fab = eng.stats()["fabric"]
     assert set(fab) == {"block_placement", "kv_page_placement",
-                        "link_utilization"}
+                        "link_utilization", "meter_calls"}
     assert 0 in fab["block_placement"]         # every pool expander listed
     assert all(0.0 <= u <= 1.0 for u in fab["link_utilization"].values())
+    assert fab["meter_calls"] >= 0             # arbitration round-trips
 
 
 def test_deterministic_outputs_vs_direct_decode(served):

@@ -1,0 +1,112 @@
+"""Gate the batched-data-path benchmark against a committed baseline.
+
+Usage:
+    python tools/check_bench_regression.py BENCH_ci.json \
+        --baseline BENCH_baseline.json [--rtol 0.25] [--min-ratio 5]
+
+Two checks, both from ``gather_sweep`` rows:
+
+  * **latency** — per-page gather latency of every ``batched`` row with
+    batch >= 32, NORMALIZED to the same run's ``scalar`` row (the
+    batched/scalar ratio cancels machine speed, so a baseline committed
+    from one box gates CI runners fairly), must not regress more than
+    ``rtol`` (default +25%) against the baseline's ratio.  Small batches
+    are excluded: their per-page numbers are dominated by fixed dispatch
+    overhead and jitter, not by the coalesced path this gate protects.
+    Rows report min-of-iterations latency, the noise-robust statistic.
+  * **metering** — the ``gather_sweep.meter_reduction.b064`` row's
+    scalar/batched arbiter-call ratio must stay >= ``--min-ratio``
+    (default 5, the acceptance floor; the batched engine ships at >100x).
+    This is machine-independent: call counts are deterministic.
+
+Exit code 1 on any violation (CI fails the bench-smoke job).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+# only the LMB-resident cells are gated: they exercise the coalesced
+# link path this gate protects, and their ratios are stable; the
+# onboard cells (tens of us of pure in-memory gather) are informational
+GATED = re.compile(r"^gather_sweep\.(lmb)\.b(\d+)\.batched$")
+MIN_GATED_BATCH = 32
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: r for r in payload["rows"]}
+
+
+def normalized(row: dict, scalar_row: dict | None) -> float:
+    """Per-page latency as a fraction of the same run's scalar path."""
+    if scalar_row is None or scalar_row["us_per_call"] <= 0:
+        raise SystemExit(f"no scalar companion row for {row['name']!r}")
+    return row["us_per_call"] / scalar_row["us_per_call"]
+
+
+def derived_field(row: dict, key: str) -> float:
+    m = re.search(rf"{key}=([0-9.]+)", row.get("derived", ""))
+    if m is None:
+        raise SystemExit(f"row {row['name']!r} has no {key}= in derived")
+    return float(m.group(1))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh BENCH json (benchmarks.run --json)")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--rtol", type=float, default=0.25,
+                    help="allowed per-page latency regression (0.25 = +25%%)")
+    ap.add_argument("--min-ratio", type=float, default=5.0,
+                    help="required scalar/batched meter-call ratio @ b064")
+    args = ap.parse_args()
+
+    base = load_rows(args.baseline)
+    cur = load_rows(args.current)
+    failures = []
+
+    for name, row in sorted(cur.items()):
+        m = GATED.match(name)
+        if not m or int(m.group(2)) < MIN_GATED_BATCH:
+            continue
+        ref = base.get(name)
+        if ref is None:
+            print(f"  [new ] {name}: no baseline row, skipping")
+            continue
+        scalar_name = name[:-len("batched")] + "scalar"
+        got = normalized(row, cur.get(scalar_name))
+        want = normalized(ref, base.get(scalar_name))
+        limit = want * (1.0 + args.rtol)
+        verdict = "FAIL" if got > limit else "ok"
+        print(f"  [{verdict:4s}] {name}: batched/scalar {got:.3f} "
+              f"({row['us_per_call']:.1f}us/page; baseline ratio "
+              f"{want:.3f}, limit {limit:.3f})")
+        if got > limit:
+            failures.append(f"{name}: ratio {got:.3f} > {limit:.3f}")
+
+    red = cur.get("gather_sweep.meter_reduction.b064")
+    if red is None:
+        failures.append("missing gather_sweep.meter_reduction.b064 row")
+    else:
+        ratio = derived_field(red, "ratio")
+        verdict = "FAIL" if ratio < args.min_ratio else "ok"
+        print(f"  [{verdict:4s}] meter_reduction.b064: {ratio:.1f}x "
+              f"(floor {args.min_ratio:.0f}x)")
+        if ratio < args.min_ratio:
+            failures.append(
+                f"meter-call reduction {ratio:.1f}x < {args.min_ratio}x")
+
+    if failures:
+        print("\nBENCH REGRESSION:", *failures, sep="\n  - ")
+        return 1
+    print("\nbench gate: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
