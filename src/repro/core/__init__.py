@@ -18,12 +18,16 @@ Layering (bottom-up):
 from repro.core.api import Allocation, LMBHost
 from repro.core.buffer import LinkedBuffer
 from repro.core.client import (DeviceSpec, ExpanderSpec, HostSpec,
-                               LMBSystem, MemoryHandle, StaleHandle,
-                               SystemSpec, TenantSpec, system_for)
+                               LMBSystem, MemoryHandle, PrefetchSpec,
+                               StaleHandle, SystemSpec, TenantSpec,
+                               system_for)
 from repro.core.fabric import (AccessDenied, DeviceClass, DeviceInfo,
                                FabricManager, make_default_fabric,
                                make_multi_fabric)
 from repro.core.offload import TierExecutor, supports_in_jit_offload
+from repro.core.overlap import (OverlapScheduler, exposed_latency_s,
+                                hidden_fraction)
+from repro.core.policy import Prefetcher, PrefetchRun
 from repro.core.placement import (ExpanderView, HeatAwarePolicy,
                                   LeastLoadedPolicy, PlacementPolicy,
                                   PlacementRequest, TenantAffinityPolicy,
@@ -42,7 +46,11 @@ __all__ = [
     "TierSpec", "congested_latency", "paper_tiers", "tpu_tiers",
     # client API (the public surface)
     "LMBSystem", "MemoryHandle", "StaleHandle", "SystemSpec",
-    "ExpanderSpec", "HostSpec", "DeviceSpec", "TenantSpec", "system_for",
+    "ExpanderSpec", "HostSpec", "DeviceSpec", "TenantSpec",
+    "PrefetchSpec", "system_for",
+    # prefetch + overlap scheduling
+    "Prefetcher", "PrefetchRun", "OverlapScheduler",
+    "exposed_latency_s", "hidden_fraction",
     # placement policies
     "PlacementPolicy", "PlacementRequest", "ExpanderView",
     "LeastLoadedPolicy", "HeatAwarePolicy", "TenantAffinityPolicy",

@@ -247,20 +247,24 @@ class LMBHost:
                              region.page_start + page)
 
     def meter_transfer(self, device_id: str, nbytes: int,
-                       mmid: Optional[int] = None) -> float:
+                       mmid: Optional[int] = None,
+                       op: str = "demand") -> float:
         """Charge an expander-link transfer to this device's QoS share;
         returns the modeled delay (queue + wire) in seconds.  Every byte a
         consumer moves to/from the LMB tier should pass through here so the
         FM's arbiters see true link occupancy.  ``mmid`` routes the charge
-        to the link of the expander actually backing the region."""
+        to the link of the expander actually backing the region; ``op``
+        classes the traffic (demand vs prefetch) for the FM's per-class
+        accounting."""
         block_id = (self.allocator.region(mmid).block_id
                     if mmid is not None else None)
         return self.fm.meter_transfer(device_id, nbytes,
-                                      block_id=block_id).delay_s
+                                      block_id=block_id, op=op).delay_s
 
     def meter_transfer_many(
             self, device_id: str,
-            charges: Sequence[Tuple[int, Optional[int]]]) -> float:
+            charges: Sequence[Tuple[int, Optional[int]]],
+            op: str = "demand") -> float:
         """Batched :meth:`meter_transfer`: charge a whole burst in one
         arbitration round-trip per backing link.
 
@@ -270,8 +274,10 @@ class LMBHost:
         single arbiter call carrying their total bytes: fairness
         accounting is byte-denominated, so the schedule and token-bucket
         math are unchanged; only the per-transfer arbitration overhead
-        (N calls -> 1 per link) is saved.  Returns the summed modeled
-        delay in seconds."""
+        (N calls -> 1 per link) is saved.  ``op`` tags every merged
+        charge (the prefetch path passes ``"prefetch"`` so its traffic
+        is distinguishable in the FM journal and per-class byte totals).
+        Returns the summed modeled delay in seconds."""
         # expander -> [total bytes, representative block_id]
         per_link: Dict[Optional[int], list] = {}
         for nbytes, mmid in charges:
@@ -286,7 +292,8 @@ class LMBHost:
         delay = 0.0
         for nbytes, block_id in per_link.values():
             delay += self.fm.meter_transfer(device_id, nbytes,
-                                            block_id=block_id).delay_s
+                                            block_id=block_id,
+                                            op=op).delay_s
         return delay
 
     def expander_of(self, mmid: int) -> int:

@@ -64,6 +64,7 @@ from repro.core.api import LMBHost
 from repro.core.client import MemoryHandle
 from repro.core.metrics import Metrics, GLOBAL_METRICS
 from repro.core.offload import TierExecutor
+from repro.core.overlap import OverlapScheduler
 from repro.core.policy import EvictionPolicy, Prefetcher, make_policy
 from repro.core.pool import OutOfMemory
 
@@ -92,6 +93,9 @@ class LinkedBuffer:
                  onboard_pages: int,
                  policy: str | EvictionPolicy = "lru",
                  prefetch_depth: int = 0,
+                 prefetch_backlog_factor: int = 8,
+                 prefetch_min_burst: Optional[int] = None,
+                 overlap: Optional[OverlapScheduler] = None,
                  lmb_chunk_pages: int = 64,
                  compress_lmb: bool = False,
                  metrics: Optional[Metrics] = None):
@@ -110,7 +114,29 @@ class LinkedBuffer:
         self.metrics = metrics or GLOBAL_METRICS
         self.policy: EvictionPolicy = (
             make_policy(policy) if isinstance(policy, str) else policy)
-        self.prefetcher = Prefetcher(prefetch_depth) if prefetch_depth else None
+        self.prefetcher = (Prefetcher(prefetch_depth,
+                                      prefetch_backlog_factor)
+                           if prefetch_depth else None)
+        #: hysteresis for STRIDE-source runs: heuristic guesses are held
+        #: back until at least this many pages accumulate, so steady-state
+        #: lookahead moves chunk-sized bursts (one arbiter charge each)
+        #: instead of advancing the frontier one page per access.  Exact
+        #: scheduled knowledge is never held back.
+        self.prefetch_min_burst = (max(prefetch_depth // 4, 1)
+                                   if prefetch_min_burst is None
+                                   else max(prefetch_min_burst, 1))
+        #: overlap scheduler gating prefetch bursts behind compute; when
+        #: set, admitted prefetch wait accrues to ``prefetch_hidden_s``
+        #: (it rides under the compute window) instead of link_wait_s
+        self.overlap = overlap
+        #: pages brought onboard by prefetch, not yet demand-read
+        self._prefetched: set = set()
+        self.prefetch_bursts = 0
+        self.prefetch_pages_total = 0
+        self.prefetch_used = 0
+        self.prefetch_wasted = 0
+        self.prefetch_deferred = 0
+        self.prefetch_hidden_s = 0.0
         self.degraded = False
         host.fm.on_failover(self._on_failover)
         # QoS link metering: every byte crossing to/from the LMB tier is
@@ -322,15 +348,23 @@ class LinkedBuffer:
                 mmid=alloc.mmid if alloc is not None else None)
 
     def _charge_links(self, charges: List[Tuple[int, Optional[int]]],
-                      pages: Sequence[int]) -> None:
+                      pages: Sequence[int], op: str = "demand") -> None:
         """Flush a batch's accumulated link charges as one burst: one
         vectorized heat update, then ONE arbiter call per backing
-        expander (LMBHost.meter_transfer_many merges same-link runs)."""
+        expander (LMBHost.meter_transfer_many merges same-link runs).
+        ``op`` tags the traffic class; prefetch bursts admitted under an
+        overlap window accrue their modeled wait to ``prefetch_hidden_s``
+        (hidden behind compute) instead of the demand-visible
+        ``link_wait_s``."""
         if pages:
             self._touch_heat_batch(pages)
         if not self._meter_via_executor and charges:
-            self.link_wait_s += self.host.meter_transfer_many(
-                self.device_id, charges)
+            delay = self.host.meter_transfer_many(
+                self.device_id, charges, op=op)
+            if op == "prefetch" and self.overlap is not None:
+                self.prefetch_hidden_s += delay
+            else:
+                self.link_wait_s += delay
 
     # --------------------------------------------------- coalesced chunk runs
     def _lmb_read_run(self, chunk: int, offs: Sequence[int]) -> jax.Array:
@@ -450,6 +484,7 @@ class LinkedBuffer:
         entry.tier, entry.slot, entry.dirty = LMB, lmb_slot, False
         self._lmb_owner[lmb_slot] = victim
         self.policy.on_remove(victim)
+        self._note_prefetch_evict(victim)
         del self._onboard_owner[slot]
         return slot
 
@@ -488,6 +523,7 @@ class LinkedBuffer:
             entry.tier, entry.slot, entry.dirty = LMB, dst, False
             self._lmb_owner[dst] = v
             self.policy.on_remove(v)
+            self._note_prefetch_evict(v)
             del self._onboard_owner[slot]
             freed.append(slot)
         if sink is None:
@@ -505,6 +541,13 @@ class LinkedBuffer:
         if entry.tier == ONBOARD:
             self.metrics.record_hit(self.name, ONBOARD, self.page_bytes)
             self.policy.on_access(page)
+            if self.prefetcher:
+                # hits feed the stride detector too — a prefetcher that
+                # only learns from misses stalls the moment it succeeds
+                # (every access hits, nothing advances the lookahead)
+                self._note_prefetch_hit(page)
+                self.prefetcher.observe(page)
+                self._prefetch_runs()
             return entry.slot
         self.metrics.record_miss(self.name, ONBOARD, self.page_bytes)
         slot = self._onboard_slot_alloc()
@@ -526,7 +569,7 @@ class LinkedBuffer:
         self.policy.on_insert(page)
         if self.prefetcher:
             self.prefetcher.observe(page)
-            self._prefetch_many(self.prefetcher.suggest(self.num_pages - 1))
+            self._prefetch_runs()
         return slot
 
     # --------------------------------------------------------- batched paging
@@ -552,6 +595,8 @@ class LinkedBuffer:
         missed = set()
         for p in pages:
             self._check(p)
+            if self.prefetcher:
+                self.prefetcher.observe(p)
             entry = self._pages[p]
             if entry.tier == ONBOARD or p in missed:
                 # second+ occurrence of a faulting page counts as a hit,
@@ -564,6 +609,7 @@ class LinkedBuffer:
                     deferred.append(p)
                 else:
                     self.policy.on_access(p)
+                    self._note_prefetch_hit(p)
                     slots[p] = entry.slot
                     hits.append(p)
             else:
@@ -597,6 +643,8 @@ class LinkedBuffer:
             self.policy.on_access(p)
         for p in faulting:
             slots[p] = self._pages[p].slot
+        if self.prefetcher:
+            self._prefetch_runs()
         return slots
 
     def _fault_wave(self, faulting: List[int]) -> None:
@@ -661,10 +709,6 @@ class LinkedBuffer:
             self._onboard_owner[slot] = p
             self.policy.on_insert(p)
         self._charge_links(charges, heat)
-        if self.prefetcher:
-            for p in faulting:
-                self.prefetcher.observe(p)
-            self._prefetch_many(self.prefetcher.suggest(self.num_pages - 1))
 
     def _batch_capacity(self, batch: Sequence[int] = ()) -> int:
         """Onboard slots a batch can actually occupy: the tier minus
@@ -719,10 +763,108 @@ class LinkedBuffer:
     def _prefetch(self, page: int) -> None:
         self._prefetch_many([page])
 
+    def _note_prefetch_evict(self, page: int) -> None:
+        """A prefetched page got demoted before anyone read it: wasted
+        link bytes (the fault-rate-delta signal the prefetch_sweep
+        benchmark reports)."""
+        if page in self._prefetched:
+            self._prefetched.discard(page)
+            self.prefetch_wasted += 1
+
+    def _note_prefetch_hit(self, page: int) -> None:
+        """A demand read landed on a prefetched page: the prefetch was
+        useful (its LMB round-trip was paid early, hidden or not)."""
+        if page in self._prefetched:
+            self._prefetched.discard(page)
+            self.prefetch_used += 1
+
+    def _prefetch_runs(self) -> int:
+        """One prefetch round: pull chunk-aligned run suggestions, keep
+        only LMB-resident pages, cap at the free-slot budget (prefetch
+        NEVER evicts a resident page), let the overlap scheduler admit
+        what fits behind the current compute window, and hand the
+        remainder back to the backlog (deferred, not dropped).  All
+        admitted pages move as ONE coalesced burst.  Returns the number
+        of pages issued."""
+        if not self.prefetcher:
+            return 0
+        runs = self.prefetcher.suggest_runs(self.num_pages - 1,
+                                            self._lmb_chunk_pages)
+        if not runs:
+            return 0
+        live: List[Tuple[str, List[int]]] = []
+        seen: set = set()
+        for run in runs:
+            pages = [p for p in run.pages
+                     if p not in seen and 0 <= p < len(self._pages)
+                     and self._pages[p].tier == LMB]
+            seen.update(pages)
+            if pages:
+                live.append((run.source, pages))
+        #: original priority position of every candidate page — deferred
+        #: pages re-queue in THIS order, whichever budget pass cut them
+        #: (a free-slot tail must not jump ahead of an overlap-deferred
+        #: run that preceded it)
+        priority = {p: i for i, p in
+                    enumerate(p for _, pages in live for p in pages)}
+        deferred: List[Tuple[str, int]] = []   # (source, page)
+        issued = 0
+        try:
+            if not live:
+                return 0
+            # hard budget first: free onboard slots only.  A run that
+            # half-fits is truncated (still one burst); the cut tail and
+            # everything after defer.
+            free = len(self._onboard_free)
+            fitted: List[Tuple[str, List[int]]] = []
+            for source, pages in live:
+                take = pages[:free]
+                free -= len(take)
+                if take:
+                    fitted.append((source, take))
+                deferred.extend((source, p) for p in pages[len(take):])
+            # burst hysteresis: stride guesses below the min-burst size
+            # wait (regenerated next round, when the frontier has grown)
+            # so steady-state lookahead stays burst-shaped; scheduled
+            # pages always go now
+            stride_pages = sum(len(pages) for source, pages in fitted
+                               if source == "stride")
+            if 0 < stride_pages < self.prefetch_min_burst:
+                fitted = [(s, pages) for s, pages in fitted
+                          if s != "stride"]
+            # overlap admission: whole runs, in priority order, while
+            # they fit behind the compute window
+            if self.overlap is not None and fitted:
+                n_admit, _ = self.overlap.admit(
+                    [len(pages) for _, pages in fitted],
+                    self.lmb_page_bytes)
+                deferred.extend((source, p)
+                                for source, pages in fitted[n_admit:]
+                                for p in pages)
+                fitted = fitted[:n_admit]
+            issue = [p for _, pages in fitted for p in pages]
+            if issue:
+                self._prefetch_many(issue)
+                issued = len(issue)
+            return issued
+        finally:
+            # exact scheduled knowledge is deferred back to the front of
+            # the backlog in original priority order; stride guesses are
+            # regenerated for free next round, so re-queueing them would
+            # only pollute it
+            requeue = sorted(
+                (p for source, p in deferred if source == "scheduled"),
+                key=priority.__getitem__)
+            if requeue:
+                self.prefetcher.defer(requeue)
+                self.prefetch_deferred += len(requeue)
+
     def _prefetch_many(self, pages: Sequence[int]) -> None:
         """Opportunistic LMB->onboard copies bounded by FREE onboard slots
         (never evicts to prefetch), moved as coalesced per-chunk runs with
-        one metering burst."""
+        one metering burst tagged ``op="prefetch"`` — prefetch traffic is
+        distinguishable from demand on the FM's journal/byte counters and
+        never pays per-page arbitration."""
         cands = [p for p in dict.fromkeys(pages)
                  if 0 <= p < len(self._pages)
                  and self._pages[p].tier == LMB]
@@ -744,7 +886,10 @@ class LinkedBuffer:
             entry.tier, entry.slot, entry.dirty = ONBOARD, slot, False
             self._onboard_owner[slot] = p
             self.policy.on_insert(p)
-        self._charge_links(charges, cands)
+        self._prefetched.update(cands)
+        self.prefetch_bursts += 1
+        self.prefetch_pages_total += len(cands)
+        self._charge_links(charges, cands, op="prefetch")
 
     # ------------------------------------------------------------------- API
     def read(self, page: int) -> jax.Array:
@@ -864,9 +1009,37 @@ class LinkedBuffer:
             self.policy.unpin(p)
 
     def schedule_prefetch(self, pages: Sequence[int]) -> None:
-        if self.prefetcher:
-            self.prefetcher.schedule(list(pages))
-            self._prefetch_many(list(pages)[: self.prefetcher.depth])
+        """Feed exact future page knowledge (a scheduler's next-round
+        access list) to the prefetcher and issue as much of it as fits
+        RIGHT NOW — free onboard slots and the overlap window budget —
+        as coalesced per-(chunk, expander) bursts.  The seed truncated
+        the list to the first ``depth`` pages and silently discarded the
+        rest; now the remainder stays in the bounded backlog (or is
+        deferred by the overlap scheduler) and issues on later rounds."""
+        if not self.prefetcher:
+            return
+        self.prefetcher.schedule(list(pages))
+        while self.prefetcher.pending():
+            before = self.prefetcher.pending()
+            self._prefetch_runs()
+            if self.prefetcher.pending() >= before:
+                break       # budgets exhausted (deferred) — later rounds
+
+    def note_compute_window(self, seconds: float,
+                            observed: bool = True) -> None:
+        """Open a new overlap window sized to the consumer's compute
+        step.  ``observed=True`` folds the sample into the scheduler's
+        EWMA estimate (the serving engine feeds measured decode-round
+        times); ``observed=False`` pins the window exactly (benchmarks
+        and simulators declaring a known compute budget).  No-op without
+        an overlap scheduler."""
+        if self.overlap is None:
+            return
+        if observed:
+            self.overlap.observe_compute(seconds)
+            self.overlap.start_window()
+        else:
+            self.overlap.start_window(seconds)
 
     # ------------------------------------------------------------- share / COW
     def share(self, page: int) -> int:
@@ -891,6 +1064,7 @@ class LinkedBuffer:
         entry.refcount -= 1
         if entry.refcount > 0:
             return
+        self._prefetched.discard(page)
         if entry.tier == ONBOARD:
             self.policy.on_remove(page)
             self._onboard_free.append(entry.slot)
@@ -1149,6 +1323,24 @@ class LinkedBuffer:
             assert e.tier == ONBOARD and e.slot == slot, "owner map stale"
         assert len(self._heat_val) >= len(self._pages), "heat array drift"
 
+    def prefetch_stats(self) -> dict:
+        """Prefetch-path health: burst counts, usefulness (used vs
+        wasted), deferrals, and the wait the overlap window hid."""
+        st = {
+            "enabled": self.prefetcher is not None,
+            "bursts": self.prefetch_bursts,
+            "pages": self.prefetch_pages_total,
+            "used": self.prefetch_used,
+            "wasted": self.prefetch_wasted,
+            "unread": len(self._prefetched),
+            "deferred": self.prefetch_deferred,
+            "hidden_wait_s": self.prefetch_hidden_s,
+            "backlog": self.prefetcher.pending() if self.prefetcher else 0,
+        }
+        if self.overlap is not None:
+            st["overlap"] = self.overlap.snapshot()
+        return st
+
     def stats(self) -> dict:
         tiers = {ONBOARD: 0, LMB: 0, "unmaterialized": 0}
         for e in self._pages:
@@ -1163,4 +1355,5 @@ class LinkedBuffer:
             "link_wait_s": self.link_wait_s,
             "link_utilization": self.host.fm.link_utilization(),
             "lmb_placement": self.lmb_placement(),
+            "prefetch": self.prefetch_stats(),
         }

@@ -262,6 +262,38 @@ class TenantSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class PrefetchSpec:
+    """Default prefetch/overlap knobs for buffers minted by this system.
+
+    ``depth`` > 0 turns on the burst-native prefetcher for every
+    :meth:`LMBSystem.buffer` that does not pass its own
+    ``prefetch_depth``; ``overlap`` additionally wires an
+    :class:`~repro.core.overlap.OverlapScheduler` over the fabric's link
+    so prefetch bursts are admitted only while they fit behind the
+    consumer's compute window (deferred otherwise, never dropped).
+    """
+
+    #: pages of lookahead per round (0 = prefetch off unless the buffer
+    #: opts in itself)
+    depth: int = 0
+    #: scheduled-backlog cap, as a multiple of ``depth``
+    backlog_factor: int = 8
+    #: gate prefetch bursts behind the compute window
+    overlap: bool = False
+    #: initial compute-window estimate (seconds); consumers refine it
+    #: via LinkedBuffer.note_compute_window
+    compute_window_s: float = 0.0
+    #: concurrent DMA streams the overlap budget assumes
+    streams: int = 1
+
+    def validate(self) -> None:
+        if self.depth < 0:
+            raise ValueError("prefetch depth must be >= 0")
+        if self.backlog_factor < 1:
+            raise ValueError("prefetch backlog_factor must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
 class SystemSpec:
     """Everything needed to stand up one LMB stack, declaratively.
 
@@ -283,6 +315,8 @@ class SystemSpec:
     link_bandwidth_Bps: float = DEFAULT_LINK_BW_Bps
     #: capacity of each default expander when ``expanders`` is an int
     pool_gib: int = 4
+    #: default prefetch/overlap knobs for buffers minted by this system
+    prefetch: PrefetchSpec = dataclasses.field(default_factory=PrefetchSpec)
 
     # -- normalized views ---------------------------------------------------
     def expander_specs(self) -> List[ExpanderSpec]:
@@ -302,6 +336,7 @@ class SystemSpec:
                 for t in self.tenants]
 
     def validate(self) -> None:
+        self.prefetch.validate()
         hosts = self.host_specs()
         if not hosts:
             raise ValueError("SystemSpec needs at least one host")
@@ -434,13 +469,40 @@ class LMBSystem:
     def free(self, handle: MemoryHandle) -> None:
         handle.free()
 
+    def overlap_scheduler(self, compute_window_s: Optional[float] = None,
+                          streams: Optional[int] = None):
+        """An :class:`~repro.core.overlap.OverlapScheduler` modeling THIS
+        fabric's expander link (CXL added latency at the spec's link
+        bandwidth) — the admission gate that decides how much prefetch
+        traffic hides behind a compute window.  Defaults come from the
+        spec's :class:`PrefetchSpec`."""
+        from repro.core.overlap import OverlapScheduler
+        from repro.core.tiers import LMB_CXL_ADDED_S, TierKind, TierSpec
+        pf = self.spec.prefetch
+        tier = TierSpec(TierKind.LMB_CXL, LMB_CXL_ADDED_S,
+                        self.spec.link_bandwidth_Bps)
+        return OverlapScheduler(
+            tier,
+            compute_window_s=(pf.compute_window_s if compute_window_s
+                              is None else compute_window_s),
+            streams=pf.streams if streams is None else streams)
+
     def buffer(self, *, name: str, device_id: str,
                host_id: Optional[str] = None, **kwargs) -> "LinkedBuffer":
         """A LinkedBuffer wired to this system's host (the consumer-facing
         paged-array surface; see repro.core.buffer).  Session-tracked:
-        :meth:`close` releases the buffer's LMB footprint too."""
+        :meth:`close` releases the buffer's LMB footprint too.  The
+        spec's :class:`PrefetchSpec` supplies prefetch/overlap defaults
+        for buffers that do not pass their own knobs."""
         from repro.core.buffer import LinkedBuffer
         self._ensure_open()
+        pf = self.spec.prefetch
+        if pf.depth and "prefetch_depth" not in kwargs:
+            kwargs["prefetch_depth"] = pf.depth
+            kwargs.setdefault("prefetch_backlog_factor", pf.backlog_factor)
+        if (pf.overlap and kwargs.get("prefetch_depth")
+                and "overlap" not in kwargs):
+            kwargs["overlap"] = self.overlap_scheduler()
         buf = LinkedBuffer(name=name, device_id=device_id,
                            host=self.host(host_id), **kwargs)
         self._buffers.append(buf)

@@ -181,6 +181,9 @@ class FabricManager:
         self.iommu = IOMMUTable()
         self.journal: List[JournalEntry] = []
         self._failover_listeners: List[Callable[[int], None]] = []
+        #: bytes metered per traffic class ("demand" | "prefetch" | ...):
+        #: lets consumers prove prefetch traffic is tagged and bounded
+        self._op_bytes: Dict[str, int] = {}
 
     # -- expander set --------------------------------------------------------
     @property
@@ -372,19 +375,47 @@ class FabricManager:
                 JournalEntry("bw_share", device_id, detail=str(weight)))
 
     def meter_transfer(self, device_id: str, nbytes: int,
-                       block_id: Optional[int] = None) -> TransferGrant:
+                       block_id: Optional[int] = None,
+                       op: str = "demand") -> TransferGrant:
         """Charge a data-path transfer against the device's link share on
         the expander backing ``block_id`` (first expander when unknown).
 
-        Hot path (every LinkedBuffer demote/fault): deliberately not
-        journaled — aggregate occupancy lives in the arbiter snapshots."""
+        ``op`` classes the traffic ("demand" faults/evictions vs
+        "prefetch" bursts); per-class byte totals are kept in
+        :meth:`op_bytes`.  Hot path (every LinkedBuffer demote/fault):
+        deliberately not journaled — aggregate occupancy lives in the
+        arbiter snapshots — but non-demand classes (prefetch, already-
+        coalesced bursts at scheduler cadence) ARE journaled, like
+        migration traffic."""
         self.device(device_id)  # InvalidHandle on unknown devices
+        with self._lock:
+            self._op_bytes[op] = self._op_bytes.get(op, 0) + nbytes
+            if op != "demand":
+                self.journal.append(JournalEntry(
+                    op, device_id, block_id=block_id, detail=f"{nbytes}B"))
         eid = (self._block_home.get(block_id)
                if block_id is not None else None)
         arb = self._arbiters.get(eid) if eid is not None else None
         if arb is None:
             arb = self.arbiter
         return arb.meter(device_id, nbytes)
+
+    def op_bytes(self) -> Dict[str, int]:
+        """Metered bytes per traffic class (e.g. demand vs prefetch)."""
+        with self._lock:
+            return dict(self._op_bytes)
+
+    def advance_links(self, dt_s: float) -> None:
+        """Let ``dt_s`` of virtual time pass on every expander link with
+        no new traffic — compute running while the wire drains.  The
+        overlap benchmarks/tests call this between metered steps so a
+        prefetch burst issued during one compute window has actually
+        left the wire by the next (otherwise every transfer since t=0
+        queues behind its predecessors and modeled delays grow without
+        bound)."""
+        with self._lock:
+            for arb in self._arbiters.values():
+                arb.advance(dt_s)
 
     def meter_calls(self) -> int:
         """Total arbitration round-trips across every expander's link —

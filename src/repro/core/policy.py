@@ -16,8 +16,9 @@ fio-style sequential workloads are the paper's best case).
 from __future__ import annotations
 
 import abc
-from collections import OrderedDict
-from typing import Dict, Hashable, List, Optional
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 
 class EvictionPolicy(abc.ABC):
@@ -195,28 +196,97 @@ def make_policy(name: str) -> EvictionPolicy:
     return {"lru": LRU, "clock": Clock, "cost": CostAwareLRU}[name]()
 
 
-class Prefetcher:
-    """Sequential/stride prefetcher over page indices.
+@dataclasses.dataclass(frozen=True)
+class PrefetchRun:
+    """One chunk-aligned run of pages to move as a single coalesced
+    burst.  ``source`` records how the run was predicted: ``scheduled``
+    (exact future knowledge from a scheduler) outranks ``stride``
+    (heuristic extrapolation) at admission time."""
 
-    ``observe`` consumes the access stream; ``suggest`` returns up to
-    ``depth`` page indices predicted next.  Matches the paper's observation
-    that sequential fio workloads are the friendly case; on TPU the serving
-    engine also feeds *scheduled* future accesses (next decode step's pages),
-    which take priority over the heuristic stream.
+    pages: Tuple[int, ...]
+    source: str                  # "scheduled" | "stride"
+
+    @property
+    def npages(self) -> int:
+        return len(self.pages)
+
+
+class Prefetcher:
+    """Burst-native sequential/stride prefetcher over page indices.
+
+    ``observe`` consumes the access stream (stride detection: confidence
+    builds on repeated strides, resets on a change, fires at >= 2,
+    saturates at 4 — pinned by a regression test); ``schedule`` takes
+    exact future knowledge from a scheduler, which always takes priority
+    over stride guesses.
+
+    The consumer-facing surface is :meth:`suggest_runs`: up to ``depth``
+    pages per round, emitted as chunk-aligned :class:`PrefetchRun`\\ s so
+    every prefetch burst rides the coalesced data path (one transfer +
+    one link charge per run) instead of page-at-a-time moves.  The
+    legacy :meth:`suggest` flat view remains for callers that predate
+    the run API.
+
+    Backlog discipline (the scheduled queue is a deque, not an
+    unbounded list):
+
+      * capped at ``backlog_factor * depth`` pages — overflow drops the
+        OLDEST hints (they are the ones demand is about to overtake);
+      * a scheduled page that gets demand-faulted first is dropped
+        lazily (``observe`` marks it stale; the pop skips it) instead
+        of being prefetched after the fact;
+      * runs the overlap scheduler could not fit behind compute are
+        ``defer``-ed back to the FRONT of the queue, preserving order —
+        deferred exact knowledge is re-issued next round, never lost.
     """
 
-    def __init__(self, depth: int = 4):
+    def __init__(self, depth: int = 4, backlog_factor: int = 8):
         self.depth = depth
+        self.backlog = max(int(backlog_factor) * max(depth, 1), 1)
         self._last: Optional[int] = None
         self._stride: Optional[int] = None
         self._confidence = 0
-        self._scheduled: List[int] = []
+        self._scheduled: deque[int] = deque()
+        self._backlogged: set = set()    # members of _scheduled
+        self._stale: set = set()         # demand-faulted before issue
+        self.dropped_overflow = 0
+        self.dropped_stale = 0
 
-    def schedule(self, pages: List[int]) -> None:
-        """Exact future knowledge from the scheduler (takes priority)."""
-        self._scheduled.extend(pages)
+    # ---------------------------------------------------------- scheduling
+    def schedule(self, pages: Sequence[int]) -> None:
+        """Exact future knowledge from the scheduler (takes priority).
+        Duplicates already backlogged are ignored; overflow beyond the
+        backlog cap sheds the OLDEST entries."""
+        for p in pages:
+            if p in self._backlogged:
+                self._stale.discard(p)   # re-scheduled: live again
+                continue
+            self._scheduled.append(p)
+            self._backlogged.add(p)
+        while len(self._scheduled) > self.backlog:
+            old = self._scheduled.popleft()
+            self._backlogged.discard(old)
+            self._stale.discard(old)
+            self.dropped_overflow += 1
 
+    def defer(self, pages: Sequence[int]) -> None:
+        """Re-queue pages an admission decision could not issue this
+        round, at the FRONT (they keep their priority next round)."""
+        fresh = [p for p in pages if p not in self._backlogged]
+        self._scheduled.extendleft(reversed(fresh))
+        self._backlogged.update(fresh)
+
+    def pending(self) -> int:
+        """Backlogged scheduled pages still waiting to be issued."""
+        return len(self._scheduled)
+
+    # ------------------------------------------------------------- stream
     def observe(self, page: int) -> None:
+        """Consume one access.  Also invalidates a backlogged hint for
+        this page: demand beat the prefetch, so issuing it later would
+        move bytes nobody is waiting for."""
+        if page in self._backlogged:
+            self._stale.add(page)
         if self._last is not None:
             stride = page - self._last
             if stride != 0:
@@ -227,17 +297,64 @@ class Prefetcher:
                     self._confidence = 1
         self._last = page
 
-    def suggest(self, max_page: int) -> List[int]:
+    # ---------------------------------------------------------- suggestion
+    def _pop_scheduled(self, max_page: int, budget: int) -> List[int]:
+        """Up to ``budget`` live scheduled pages, FIFO, stale-skipped."""
         out: List[int] = []
-        while self._scheduled and len(out) < self.depth:
-            p = self._scheduled.pop(0)
-            if 0 <= p <= max_page:
+        while self._scheduled and len(out) < budget:
+            p = self._scheduled.popleft()
+            self._backlogged.discard(p)
+            if p in self._stale:
+                self._stale.discard(p)
+                self.dropped_stale += 1
+                continue
+            if 0 <= p <= max_page and p not in out:
                 out.append(p)
-        if (len(out) < self.depth and self._confidence >= 2
-                and self._last is not None and self._stride):
-            nxt = self._last
-            for _ in range(self.depth - len(out)):
-                nxt += self._stride
-                if 0 <= nxt <= max_page:
-                    out.append(nxt)
         return out
+
+    def _stride_guesses(self, max_page: int, budget: int) -> List[int]:
+        if budget <= 0 or self._confidence < 2 or not self._stride \
+                or self._last is None:
+            return []
+        out: List[int] = []
+        nxt = self._last
+        for _ in range(budget):
+            nxt += self._stride
+            if 0 <= nxt <= max_page:
+                out.append(nxt)
+        return out
+
+    @staticmethod
+    def _group_runs(pages: Sequence[int], run_pages: int,
+                    source: str) -> List[PrefetchRun]:
+        """Group pages into chunk-aligned runs (same ``page // run_pages``
+        extent), preserving first-seen order of the extents."""
+        runs: "OrderedDict[int, List[int]]" = OrderedDict()
+        for p in pages:
+            runs.setdefault(p // run_pages, []).append(p)
+        return [PrefetchRun(tuple(ps), source) for ps in runs.values()]
+
+    def suggest_runs(self, max_page: int,
+                     run_pages: int = 1) -> List[PrefetchRun]:
+        """Up to ``depth`` predicted pages as chunk-aligned runs.
+
+        Scheduled pages are consumed first (and grouped per ``run_pages``
+        extent — the LinkedBuffer passes its LMB chunk size so each run
+        maps to one (chunk, expander) burst); any remaining budget is
+        filled by promoting the stride detector to a run extent: the
+        next ``depth`` strides ahead of the last access, grouped the
+        same way.
+        """
+        run_pages = max(run_pages, 1)
+        taken = self._pop_scheduled(max_page, self.depth)
+        runs = self._group_runs(taken, run_pages, "scheduled")
+        guesses = [g for g in
+                   self._stride_guesses(max_page, self.depth - len(taken))
+                   if g not in taken]
+        runs.extend(self._group_runs(guesses, run_pages, "stride"))
+        return runs
+
+    def suggest(self, max_page: int) -> List[int]:
+        """Legacy flat view of :meth:`suggest_runs` (single-page grain)."""
+        return [p for run in self.suggest_runs(max_page)
+                for p in run.pages]

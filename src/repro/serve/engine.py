@@ -57,6 +57,17 @@ class EngineConfig:
     page_tokens: int = 32
     onboard_pages: int = 32            # HBM-tier KV budget
     prefill_bucket: int = 64
+    #: feed each active sequence's next-decode page list to the KV
+    #: store's prefetcher every batch round (exact future knowledge,
+    #: moved as coalesced bursts).  Pure performance knob: tokens are
+    #: identical with it off.
+    kv_prefetch: bool = True
+    #: pages of prefetch lookahead per round (0 disables the prefetcher
+    #: outright, not just the engine-fed schedule)
+    kv_prefetch_depth: int = 2
+    #: initial compute-window estimate for the overlap scheduler; the
+    #: engine refines it with measured decode-round times
+    kv_compute_window_s: float = 1e-3
 
 
 class ServeEngine:
@@ -76,9 +87,21 @@ class ServeEngine:
         self.qos = qos
         self.shed: List[int] = []
         self._tenant_live: Dict[str, int] = {}   # in-flight reqs per tenant
+        overlap = None
+        if ecfg.kv_prefetch and ecfg.kv_prefetch_depth:
+            # admission gate for prefetch bursts: sized to the decode
+            # round's compute window (EWMA-learned from measured rounds)
+            from repro.core.overlap import OverlapScheduler
+            from repro.core.tiers import TierKind, tpu_tiers
+            overlap = OverlapScheduler(
+                tpu_tiers()[TierKind.HOST_DRAM],
+                compute_window_s=ecfg.kv_compute_window_s)
         self.kv = PagedKVStore(
             cfg=model.cfg, host=host, device_id=device_id,
-            page_tokens=ecfg.page_tokens, onboard_pages=ecfg.onboard_pages)
+            page_tokens=ecfg.page_tokens, onboard_pages=ecfg.onboard_pages,
+            prefetch_depth=(ecfg.kv_prefetch_depth if ecfg.kv_prefetch
+                            else 0),
+            overlap=overlap)
         self.waiting: deque[Request] = deque()
         self.active: Dict[int, Request] = {}      # slot -> request
         self.requests: Dict[int, Request] = {}
@@ -176,12 +199,30 @@ class ServeEngine:
         self.waiting.appendleft(req)
         self._slot_free.append(slot)
 
+    def _schedule_round_prefetch(self) -> None:
+        """Feed the prefetcher this round's exact future: every active
+        sequence's next-decode page list, batched into ONE schedule call
+        so the pages group into per-(chunk, expander) bursts instead of
+        per-sequence dribbles."""
+        pages: List[int] = []
+        for req in self.active.values():
+            if req.seq_id is not None:
+                pages.extend(self.kv.next_decode_pages(req.seq_id))
+        if pages:
+            self.kv.schedule_prefetch(pages)
+
     def step(self) -> int:
         """One engine iteration: admit + one decode step per active req.
 
         Decodes per-request (CPU-demo path); the TPU path batches slots
-        into one decode_step with the paged-attention kernel."""
+        into one decode_step with the paged-attention kernel.  With
+        ``kv_prefetch`` on, the round's next-decode KV pages are
+        scheduled ahead as bursts, and the measured decode time feeds
+        the overlap scheduler's compute-window estimate."""
         self._admit()
+        if self.ecfg.kv_prefetch:
+            self._schedule_round_prefetch()
+        round_t0 = time.monotonic()
         finished = 0
         for slot, req in list(self.active.items()):
             tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
@@ -202,6 +243,8 @@ class ServeEngine:
                 self._slot_free.append(slot)
                 finished += 1
                 self._qos_finish(req)
+        if self.ecfg.kv_prefetch and self.active:
+            self.kv.note_compute_window(time.monotonic() - round_t0)
         return finished
 
     def _qos_finish(self, req: Request) -> None:

@@ -29,6 +29,7 @@ from repro.core.api import LMBHost
 from repro.core.buffer import LinkedBuffer
 from repro.core.client import LMBSystem
 from repro.core.offload import TierExecutor
+from repro.core.overlap import OverlapScheduler
 
 
 @dataclasses.dataclass
@@ -52,6 +53,8 @@ class PagedKVStore:
                  page_tokens: int = 64, onboard_pages: int = 64,
                  n_layers: Optional[int] = None,
                  compress_cold: bool = False,
+                 prefetch_depth: int = 2,
+                 overlap: Optional[OverlapScheduler] = None,
                  executor: Optional[TierExecutor] = None):
         if host is None:
             if system is None:
@@ -66,8 +69,8 @@ class PagedKVStore:
             name=f"kv:{device_id}", device_id=device_id, host=host,
             executor=executor, page_shape=self.page_shape,
             dtype=jnp.dtype(cfg.dtype), onboard_pages=onboard_pages,
-            policy="cost", prefetch_depth=2,
-            compress_lmb=compress_cold)
+            policy="cost", prefetch_depth=prefetch_depth,
+            overlap=overlap, compress_lmb=compress_cold)
         self._seqs: Dict[int, SeqPages] = {}
         self._next_id = 0
 
@@ -161,8 +164,30 @@ class PagedKVStore:
     def unpin_seq(self, sid: int) -> None:
         self.buf.unpin_many(self._seqs[sid].pages)
 
+    def next_decode_pages(self, sid: int) -> List[int]:
+        """The KV pages the NEXT decode step of this sequence will touch
+        — exact future knowledge for the prefetcher.  A token landing at
+        a page boundary opens a fresh page (nothing to fetch); otherwise
+        the partially-filled tail page is read-modified-written."""
+        seq = self._seqs[sid]
+        if seq.length == 0 or seq.length % self.page_tokens == 0:
+            return []
+        return [seq.pages[seq.length // self.page_tokens]]
+
+    def schedule_prefetch(self, pages: List[int]) -> None:
+        """Feed a batch round's worth of scheduled page accesses to the
+        buffer's prefetcher: pages move as coalesced per-(chunk,
+        expander) bursts, bounded by free slots and the overlap window
+        (remainder deferred, not dropped)."""
+        self.buf.schedule_prefetch(pages)
+
+    def note_compute_window(self, seconds: float) -> None:
+        """Report one decode round's compute time so the overlap
+        scheduler can size the next prefetch window."""
+        self.buf.note_compute_window(seconds)
+
     def schedule_swap_in(self, sid: int) -> None:
-        self.buf.schedule_prefetch(self._seqs[sid].pages)
+        self.schedule_prefetch(self._seqs[sid].pages)
 
     # ----------------------------------------------------------- accounting
     def stats(self) -> dict:

@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.overlap import exposed_latency_s
 from repro.core.tiers import congested_latency
 from repro.qos.arbiter import jain_fairness, weighted_max_min
 from repro.qos.migration import plan_rebalance
@@ -66,14 +67,21 @@ class SimResult:
 def simulate(spec: SSDSpec, scheme: Scheme, workload: Workload,
              seed: Optional[int] = None, *,
              data_rate_cap_iops: Optional[float] = None,
-             link_utilization: float = 0.0) -> SimResult:
+             link_utilization: float = 0.0,
+             prefetch_depth: int = 0) -> SimResult:
     """Closed-loop DES of one device.
 
     ``data_rate_cap_iops`` throttles the data stage below the device's
     Table-3 rate — the granted share of a shared expander link in
     multi-device mode.  ``link_utilization`` inflates the external index
     latency by the queueing model (0.0 = seed behaviour: alone on the
-    link).
+    link).  ``prefetch_depth`` models a sequential lookahead of that
+    many IOs: the external L2P access for IO *i* issues while the
+    preceding ``depth`` IOs occupy the data stage, hiding up to that
+    compute window of its latency (repro.core.overlap) — bandwidth is
+    hideable behind compute, but the index engine's service rate is
+    not, and random/zipf patterns (no predictable next index) get no
+    hiding at all: the demand-only parity case.
     """
     rng = np.random.default_rng(workload.seed if seed is None else seed)
     n = workload.n_ios
@@ -106,6 +114,13 @@ def simulate(spec: SSDSpec, scheme: Scheme, workload: Workload,
             # rate as well would double-count the link.
             index_rate = engine.rate(scheme.t_tier_s)
             index_lat = congested_latency(scheme.t_tier_s, link_utilization)
+            if prefetch_depth > 0 and pattern == "seq":
+                # lookahead window = the data-stage service time of the
+                # depth preceding IOs; only the latency the window can't
+                # cover stays exposed (congestion inflation included —
+                # outstanding transfers hide queueing too)
+                index_lat = exposed_latency_s(
+                    index_lat, prefetch_depth / data_rate)
     else:
         index_rate, index_lat = float("inf"), 0.0
 
@@ -183,6 +198,7 @@ def simulate_shared_fabric(spec: SSDSpec, scheme: Scheme, workload: Workload,
                            n_devices: int,
                            link_bandwidth_Bps: float = 30e9,
                            weights: Optional[Sequence[float]] = None,
+                           prefetch_depth: int = 0,
                            ) -> SharedFabricResult:
     """Fig-6 pipeline × N devices hammering ONE expander.
 
@@ -191,7 +207,10 @@ def simulate_shared_fabric(spec: SSDSpec, scheme: Scheme, workload: Workload,
     the link.  The link is divided by weighted max-min fairness
     (:func:`repro.qos.arbiter.weighted_max_min`); each device's data stage
     is capped at its grant and its external index accesses see the
-    congested tier latency at the link's offered load.
+    congested tier latency at the link's offered load.  ``prefetch_depth``
+    gives every device the sequential-lookahead latency hiding modeled in
+    :func:`simulate` — prefetch bandwidth rides behind the data stage, so
+    it raises goodput without changing the arbiter's fairness math.
     """
     if weights is None:
         weights = [1.0] * n_devices
@@ -199,7 +218,7 @@ def simulate_shared_fabric(spec: SSDSpec, scheme: Scheme, workload: Workload,
         raise ValueError(f"{len(weights)} weights for {n_devices} devices")
 
     # one device's unconstrained throughput = its sustained link demand
-    base = simulate(spec, scheme, workload)
+    base = simulate(spec, scheme, workload, prefetch_depth=prefetch_depth)
     demand_Bps = base.iops * workload.io_bytes
 
     names = [f"dev{i}" for i in range(n_devices)]
@@ -213,7 +232,8 @@ def simulate_shared_fabric(spec: SSDSpec, scheme: Scheme, workload: Workload,
     for i, nm in enumerate(names):
         r = simulate(spec, scheme, workload, seed=workload.seed + i,
                      data_rate_cap_iops=grants[nm] / workload.io_bytes,
-                     link_utilization=offered)
+                     link_utilization=offered,
+                     prefetch_depth=prefetch_depth)
         per_device.append(dataclasses.replace(r, device=f"{r.device}#{i}"))
 
     goodputs = [r.iops * workload.io_bytes for r in per_device]

@@ -1,0 +1,476 @@
+"""Burst-aware prefetcher + overlap scheduling.
+
+Covers the prefetch rebuild end to end: the Prefetcher's pinned stride
+semantics and new run/backlog machinery, LinkedBuffer prefetch bursts
+(op-tagged metering, never-evict, free-slot budget, deferral instead of
+truncation), the OverlapScheduler admission math, the serving engine's
+exact-future scheduling, and the DES prefetch model.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import OverlapScheduler, system_for
+from repro.core.metrics import Metrics
+from repro.core.overlap import exposed_latency_s, hidden_fraction
+from repro.core.policy import Prefetcher
+from repro.core.tiers import (LMB_CXL_ADDED_S, TierKind, TierSpec,
+                              hideable_page_bytes)
+
+PAGE = (4, 4)
+LINK_TIER = TierSpec(TierKind.LMB_CXL, LMB_CXL_ADDED_S, 30e9)
+
+
+def make_buf(n_pages=24, onboard=8, chunk=8, depth=4, overlap=None,
+             n_expanders=1, compress=False, min_burst=1, **kw):
+    """System + buffer with every page written once (cold pages spilled
+    to the LMB tier), stride detector untouched."""
+    metrics = Metrics()
+    system = system_for("d0", host_id="h0", pool_gib=1, page_bytes=4096,
+                        n_expanders=n_expanders, metrics=metrics)
+    buf = system.buffer(name="pf", device_id="d0", page_shape=PAGE,
+                        dtype=jnp.float32, onboard_pages=onboard,
+                        lmb_chunk_pages=chunk, prefetch_depth=depth,
+                        prefetch_min_burst=min_burst, overlap=overlap,
+                        compress_lmb=compress, metrics=metrics, **kw)
+    pages = buf.append_pages(n_pages)
+    for p in pages:
+        buf.write(p, jnp.full(PAGE, 1.0 + p, jnp.float32))
+    return system, buf, pages
+
+
+def lmb_pages(buf, pages):
+    return [p for p in pages if buf._pages[p].tier == "lmb"]
+
+
+def onboard_pages(buf, pages):
+    return [p for p in pages if buf._pages[p].tier == "onboard"]
+
+
+# ---------------------------------------------------------------- Prefetcher
+def test_stride_confidence_pinned():
+    """Regression pin of the pre-refactor stride semantics: confidence
+    builds on repeated strides, fires at >= 2, resets to 1 on a stride
+    change, saturates at 4; zero strides are ignored."""
+    pf = Prefetcher(depth=4)
+    pf.observe(10)
+    assert pf.suggest(100) == []              # no stride yet
+    pf.observe(12)
+    assert pf._confidence == 1
+    assert pf.suggest(100) == []              # one observation is a guess
+    pf.observe(14)
+    assert pf._confidence == 2
+    assert pf.suggest(100) == [16, 18, 20, 22]
+    pf.observe(14)                            # dup access: stride 0 ignored
+    assert pf._confidence == 2
+    pf.observe(15)                            # stride change resets
+    assert pf._confidence == 1
+    assert pf.suggest(100) == []
+    for p in (16, 17, 18, 19, 20, 21):
+        pf.observe(p)
+    assert pf._confidence == 4                # saturates, never higher
+    assert pf.suggest(23) == [22, 23]         # clipped to max_page
+    pf2 = Prefetcher(depth=4)
+    for p in (30, 28, 26):
+        pf2.observe(p)
+    assert pf2.suggest(100) == [24, 22, 20, 18]   # negative strides work
+
+
+def test_suggest_runs_chunk_grouping_and_priority():
+    """Scheduled pages come first, grouped per chunk extent; leftover
+    budget is the stride detector promoted to a run extent."""
+    pf = Prefetcher(depth=6)
+    for p in (0, 1, 2):
+        pf.observe(p)
+    pf.schedule([9, 10, 17, 33])
+    runs = pf.suggest_runs(100, run_pages=8)
+    assert [(r.source, r.pages) for r in runs] == [
+        ("scheduled", (9, 10)),               # chunk 1
+        ("scheduled", (17,)),                 # chunk 2
+        ("scheduled", (33,)),                 # chunk 4
+        ("stride", (3, 4)),                   # budget 6 - 4 scheduled
+    ]
+    # scheduled knowledge consumed: next round is pure stride
+    runs = pf.suggest_runs(100, run_pages=8)
+    assert all(r.source == "stride" for r in runs)
+
+
+def test_backlog_capped_deque_and_stale_drop():
+    """The scheduled backlog is bounded (oldest shed first) and a page
+    demand-faulted before its prefetch is dropped, not issued late."""
+    pf = Prefetcher(depth=2, backlog_factor=2)   # cap = 4 pages
+    pf.schedule([1, 2, 3, 4, 5, 6])
+    assert pf.pending() == 4                     # 1, 2 shed (oldest)
+    assert pf.dropped_overflow == 2
+    pf.observe(3)                                # demand beat the prefetch
+    runs = pf.suggest_runs(100, run_pages=64)
+    issued = [p for r in runs for p in r.pages]
+    assert 3 not in issued and issued == [4, 5]  # depth 2, stale skipped
+    assert pf.dropped_stale == 1
+
+
+def test_defer_preserves_front_priority():
+    pf = Prefetcher(depth=4)
+    pf.schedule([20, 21, 22, 23])
+    taken = [p for r in pf.suggest_runs(100, run_pages=64)
+             for p in r.pages]
+    assert taken == [20, 21, 22, 23]
+    pf.defer([22, 23])                           # overlap couldn't fit
+    pf.schedule([24])
+    taken = [p for r in pf.suggest_runs(100, run_pages=64)
+             for p in r.pages]
+    assert taken == [22, 23, 24]                 # deferred keep priority
+
+
+# ------------------------------------------------------------- OverlapScheduler
+def test_overlap_budget_and_admission_order():
+    ov = OverlapScheduler(LINK_TIER, compute_window_s=1e-3)
+    assert ov.budget_bytes() == hideable_page_bytes(1e-3, LINK_TIER)
+    page = 64 * 1024
+    budget_pages = ov.budget_bytes() // page
+    # admit whole runs in order until the budget runs out
+    n, charged = ov.admit([2, 2, int(budget_pages)], page)
+    assert n == 2 and charged == [2, 2]
+    assert ov.stats.deferred_runs == 1
+    # a later small run must NOT jump a deferred big one next round:
+    # admission is strictly prefix-order within one call
+    ov.start_window()
+    n, _ = ov.admit([int(budget_pages) + 1, 1], page)
+    assert n == 0
+    assert ov.stats.deferred_pages >= budget_pages + 2
+
+
+def test_overlap_window_ewma_and_pinned():
+    ov = OverlapScheduler(LINK_TIER, compute_window_s=0.0, ewma_alpha=0.5)
+    assert ov.budget_bytes() == 0                # no window, no budget
+    ov.observe_compute(1e-3)
+    assert ov.window_s == pytest.approx(1e-3)    # first sample seeds
+    ov.observe_compute(3e-3)
+    assert ov.window_s == pytest.approx(2e-3)    # EWMA
+    ov.start_window(5e-3)                        # pinned window wins
+    assert ov.window_s == pytest.approx(5e-3)
+
+
+def test_exposed_latency_and_hidden_fraction():
+    assert exposed_latency_s(1e-6, 0.0) == 1e-6
+    assert exposed_latency_s(1e-6, 4e-7) == pytest.approx(6e-7)
+    assert exposed_latency_s(1e-6, 2e-6) == 0.0
+    assert hidden_fraction(1e-6, 5e-7) == pytest.approx(0.5)
+    assert hidden_fraction(0.0, 0.0) == 1.0
+
+
+# ------------------------------------------------------------- buffer bursts
+def test_prefetch_never_evicts_and_respects_free_slots():
+    """Prefetch uses FREE onboard slots only: resident pages survive any
+    schedule_prefetch, and an oversized schedule is deferred."""
+    system, buf, pages = make_buf(n_pages=24, onboard=8)
+    resident_before = set(onboard_pages(buf, pages))
+    cold = lmb_pages(buf, pages)
+    buf.schedule_prefetch(cold)                  # 16 cold pages, 0 free
+    assert set(onboard_pages(buf, pages)) == resident_before
+    assert buf.prefetch_pages_total == 0         # nothing issued
+    assert buf.prefetcher.pending() > 0          # deferred, not dropped
+    # free some slots: the backlog drains into exactly that budget
+    for p in list(resident_before)[:4]:
+        buf.release(p)
+    buf.schedule_prefetch([])                    # kick a round
+    assert buf.prefetch_pages_total == 4
+    buf.check_invariants()
+
+
+def test_schedule_prefetch_not_truncated_to_depth():
+    """The seed issued only the first `depth` pages of an exact
+    scheduled list; the rebuilt path keeps the remainder in the backlog
+    and issues it on later rounds."""
+    system, buf, pages = make_buf(n_pages=24, onboard=12, depth=2)
+    for p in onboard_pages(buf, pages)[:8]:
+        buf.release(p)                           # 8 free slots
+    cold = lmb_pages(buf, pages)[:8]
+    buf.schedule_prefetch(cold)                  # depth=2 per round
+    assert all(buf._pages[p].tier == "onboard" for p in cold)
+    assert buf.prefetch_pages_total == 8
+    buf.check_invariants()
+
+
+def test_prefetch_burst_metering_and_op_tag():
+    """A multi-page prefetch is ONE arbiter call per expander, tagged
+    op='prefetch' in the FM's per-class bytes and journal — never
+    per-page meter calls."""
+    system, buf, pages = make_buf(n_pages=24, onboard=8, chunk=32,
+                                  depth=8)
+    for p in onboard_pages(buf, pages):
+        buf.release(p)
+    cold = lmb_pages(buf, pages)[:6]
+    calls0 = system.fm.meter_calls()
+    journal0 = len(system.fm.journal)
+    buf.schedule_prefetch(cold)
+    assert buf.prefetch_pages_total == 6
+    assert system.fm.meter_calls() - calls0 == 1         # one burst
+    assert system.fm.op_bytes().get("prefetch", 0) == \
+        6 * buf.lmb_page_bytes
+    tagged = [e for e in system.fm.journal[journal0:]
+              if e.op == "prefetch"]
+    assert len(tagged) == 1                              # journaled burst
+    buf.check_invariants()
+
+
+@pytest.mark.parametrize("compress", [False, True])
+@pytest.mark.parametrize("n_expanders", [1, 2])
+def test_prefetched_read_identical_to_demand_fault(compress, n_expanders):
+    """A prefetched-then-read page yields byte-identical contents vs a
+    demand fault, including compressed and multi-expander placements."""
+    mk = lambda: make_buf(n_pages=20, onboard=6, chunk=4,
+                          compress=compress, n_expanders=n_expanders)
+    _, buf_a, pages_a = mk()                     # demand twin
+    _, buf_b, pages_b = mk()                     # prefetch twin
+    assert pages_a == pages_b
+    cold = lmb_pages(buf_b, pages_b)
+    for p in onboard_pages(buf_b, pages_b)[:4]:
+        buf_b.release(p)
+        buf_a.release(p)
+    buf_b.schedule_prefetch(cold)
+    assert buf_b.prefetch_pages_total > 0
+    for p in cold:
+        got = np.asarray(buf_b.read(p))
+        want = np.asarray(buf_a.read(p))         # pure demand fault
+        assert np.array_equal(got, want), p
+    buf_a.check_invariants()
+    buf_b.check_invariants()
+
+
+def test_prefetch_used_and_wasted_accounting():
+    system, buf, pages = make_buf(n_pages=24, onboard=8)
+    for p in onboard_pages(buf, pages)[:4]:
+        buf.release(p)
+    cold = lmb_pages(buf, pages)[:4]
+    buf.schedule_prefetch(cold)
+    assert buf.prefetch_pages_total == 4
+    buf.read(cold[0])                            # used
+    assert buf.prefetch_used == 1
+    # hammer other pages until the remaining prefetched ones evict
+    victims = lmb_pages(buf, pages)
+    for p in victims:
+        buf.read(p)
+    assert buf.prefetch_used + buf.prefetch_wasted >= 3
+    st = buf.prefetch_stats()
+    assert st["pages"] == st["used"] + st["wasted"] + st["unread"]
+
+
+def test_overlap_defers_prefetch_until_window_allows():
+    """With a tiny compute window nothing is admitted (deferred, demand
+    serves); growing the window lets the same backlog issue."""
+    ov = OverlapScheduler(LINK_TIER, compute_window_s=0.0)
+    system, buf, pages = make_buf(n_pages=24, onboard=8, overlap=ov)
+    for p in onboard_pages(buf, pages)[:6]:
+        buf.release(p)
+    cold = lmb_pages(buf, pages)[:6]
+    buf.note_compute_window(0.0, observed=False)
+    buf.schedule_prefetch(cold)
+    assert buf.prefetch_pages_total == 0         # no window, no traffic
+    assert buf.prefetcher.pending() == 6
+    buf.note_compute_window(1e-3, observed=False)
+    buf.schedule_prefetch([])
+    assert buf.prefetch_pages_total == 6
+    assert buf.prefetch_hidden_s > 0             # wait accrued as hidden
+    assert buf.link_wait_s == pytest.approx(buf.link_wait_s)
+    buf.check_invariants()
+
+
+def test_hidden_wait_separate_from_demand_wait():
+    """Admitted prefetch wait lands in prefetch_hidden_s, demand wait in
+    link_wait_s — the split the hidden-fraction metric is built on."""
+    ov = OverlapScheduler(LINK_TIER, compute_window_s=1e-3)
+    system, buf, pages = make_buf(n_pages=24, onboard=8, overlap=ov)
+    for p in onboard_pages(buf, pages)[:4]:
+        buf.release(p)
+    demand0 = buf.link_wait_s
+    buf.schedule_prefetch(lmb_pages(buf, pages)[:4])
+    assert buf.prefetch_hidden_s > 0
+    assert buf.link_wait_s == demand0            # no demand charge
+    buf.read(lmb_pages(buf, pages)[0])           # a real demand fault
+    assert buf.link_wait_s > demand0
+
+
+def test_deferred_requeue_preserves_priority_order():
+    """Pages cut by DIFFERENT budget passes (free-slot tail vs overlap
+    deferral) must re-queue in original schedule order: a later run's
+    tail never jumps ahead of an earlier deferred page."""
+    page_bytes = int(np.prod(PAGE)) * 4
+    window = LMB_CXL_ADDED_S + (2.5 * page_bytes) / 30e9   # 2-page budget
+    ov = OverlapScheduler(LINK_TIER, compute_window_s=window)
+    system, buf, pages = make_buf(n_pages=12, onboard=8, chunk=2,
+                                  depth=4, overlap=ov)
+    cold = lmb_pages(buf, pages)
+    assert cold == [0, 1, 2, 3]                  # chunks (0,0), (1,1)
+    for p in onboard_pages(buf, pages)[:3]:
+        buf.release(p)                           # 3 free slots
+    buf.schedule_prefetch(cold)
+    # run (0,1) admitted; page 2 overlap-deferred (budget spent), page 3
+    # free-slot-deferred — the backlog must hold them IN ORDER
+    assert buf.prefetch_pages_total == 2
+    assert list(buf.prefetcher._scheduled) == [2, 3]
+    buf.check_invariants()
+
+
+def test_stride_min_burst_hysteresis():
+    """Steady-state stride lookahead accumulates into >= min_burst page
+    bursts instead of one arbiter call per page."""
+    system, buf, pages = make_buf(n_pages=40, onboard=16, chunk=8,
+                                  depth=8, min_burst=4)
+    for p in onboard_pages(buf, pages):
+        buf.release(p)
+    calls0 = system.fm.meter_calls()
+    scan = lmb_pages(buf, pages)[:24]
+    for p in scan:
+        buf.read(p)
+        buf.release(p)
+    calls = system.fm.meter_calls() - calls0
+    st = buf.prefetch_stats()
+    assert st["pages"] > 0
+    assert st["pages"] / max(st["bursts"], 1) >= 2   # real bursts
+    assert calls < len(scan)                     # fewer calls than pages
+
+
+# ------------------------------------------------------------------ serving
+@pytest.fixture(scope="module")
+def served():
+    import jax
+    from repro.configs.base import get_config
+    from repro.models import build_model
+    from repro.models.flags import Flags
+    cfg = get_config("qwen2-1.5b").reduced()
+    model = build_model(cfg, Flags(remat=False))
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def make_engine(served, **kw):
+    from repro.serve import EngineConfig, ServeEngine
+    cfg, model, params = served
+    defaults = dict(decode_slots=4, max_seq_len=64, page_tokens=4,
+                    onboard_pages=4, prefill_bucket=16)
+    defaults.update(kw)
+    return ServeEngine(model, params,
+                       system_for("tpu0", host_id="h0", pool_gib=1,
+                                  page_bytes=4096),
+                       EngineConfig(**defaults))
+
+
+def run_workload(eng, n_req=6, n_tok=6):
+    rng = np.random.default_rng(7)
+    rids = [eng.submit(rng.integers(0, 100, 18), max_new_tokens=n_tok)
+            for _ in range(n_req)]
+    rounds = 0
+    while (eng.waiting or eng.active) and rounds < 400:
+        eng.step()
+        rounds += 1
+    return rids, rounds
+
+
+def test_serve_prefetch_on_off_identical_tokens(served):
+    """ServeEngine.step() with prefetch enabled produces identical
+    tokens to prefetch-disabled runs — prefetch is a pure performance
+    transform on the KV data path."""
+    eng_on = make_engine(served, kv_prefetch=True)
+    eng_off = make_engine(served, kv_prefetch=False)
+    rids_on, _ = run_workload(eng_on)
+    rids_off, _ = run_workload(eng_off)
+    for a, b in zip(rids_on, rids_off):
+        ra, rb = eng_on.requests[a], eng_off.requests[b]
+        assert ra.state == rb.state == "done"
+        assert ra.out_tokens == rb.out_tokens
+    assert eng_on.kv.buf.prefetcher is not None
+    assert eng_off.kv.buf.prefetcher is None
+
+
+def test_serve_prefetch_meter_calls_do_not_regress(served):
+    """meter_calls per decode round with engine-fed prefetch must not
+    exceed the demand-only (PR-4 batched) baseline: scheduled pages move
+    as bursts that REPLACE demand faults, they don't add traffic."""
+    eng_on = make_engine(served, kv_prefetch=True)
+    eng_off = make_engine(served, kv_prefetch=False)
+    _, rounds_on = run_workload(eng_on)
+    _, rounds_off = run_workload(eng_off)
+    calls_on = eng_on.stats()["fabric"]["meter_calls"] / rounds_on
+    calls_off = eng_off.stats()["fabric"]["meter_calls"] / rounds_off
+    assert calls_on <= calls_off * 1.01
+    # and the exact-future path actually engaged under KV spill pressure
+    st = eng_on.kv.buf.prefetch_stats()
+    assert st["enabled"]
+
+
+def test_next_decode_pages():
+    from repro.configs.base import get_config
+    from repro.serve.kv_cache import PagedKVStore
+    cfg = get_config("qwen2-1.5b").reduced()
+    system = system_for("tpu0", host_id="h0", pool_gib=1, page_bytes=4096)
+    kv = PagedKVStore(cfg=cfg, system=system, device_id="tpu0",
+                      page_tokens=4, onboard_pages=8)
+    sid = kv.new_seq()
+    assert kv.next_decode_pages(sid) == []       # empty: fresh page next
+    L, KV_, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_
+    kv.append_tokens(sid, jnp.ones((L, 2, 6, KV_, hd),
+                                   jnp.dtype(cfg.dtype)))
+    seq = kv.seq(sid)
+    assert kv.next_decode_pages(sid) == [seq.pages[1]]   # tail partial
+    kv.append_tokens(sid, jnp.ones((L, 2, 2, KV_, hd),
+                                   jnp.dtype(cfg.dtype)))
+    assert kv.next_decode_pages(sid) == []       # boundary: fresh page
+
+
+# ---------------------------------------------------------------------- sim
+def test_sim_prefetch_hides_sequential_latency_only():
+    from repro.sim import make_ssd_model, make_workload, simulate
+    from repro.sim.ssd import make_schemes
+    spec = make_ssd_model(5)
+    scheme = make_schemes(spec)["lmb-cxl"]
+    seq = make_workload("seqread", n_ios=20_000)
+    rand = make_workload("randread", n_ios=20_000)
+    base_seq = simulate(spec, scheme, seq)
+    pf_seq = simulate(spec, scheme, seq, prefetch_depth=8)
+    assert pf_seq.mean_lat_us < base_seq.mean_lat_us
+    assert pf_seq.iops >= base_seq.iops
+    base_rand = simulate(spec, scheme, rand)
+    pf_rand = simulate(spec, scheme, rand, prefetch_depth=8)
+    assert pf_rand.mean_lat_us == base_rand.mean_lat_us   # parity
+    assert pf_rand.iops == base_rand.iops
+
+
+def test_sim_shared_fabric_prefetch_passthrough():
+    from repro.sim import (make_ssd_model, make_workload,
+                           simulate_shared_fabric)
+    from repro.sim.ssd import make_schemes
+    spec = make_ssd_model(5)
+    scheme = make_schemes(spec)["lmb-cxl"]
+    wl = make_workload("seqread", n_ios=10_000)
+    base = simulate_shared_fabric(spec, scheme, wl, 4)
+    pf = simulate_shared_fabric(spec, scheme, wl, 4, prefetch_depth=8)
+    assert pf.mean_p99_us <= base.mean_p99_us
+
+
+# ------------------------------------------------------------- client config
+def test_system_spec_prefetch_knobs():
+    import jax.numpy as jnp_
+    from repro.core import (DeviceSpec, HostSpec, LMBSystem, PrefetchSpec,
+                            SystemSpec)
+    spec = SystemSpec(expanders=1, pool_gib=1,
+                      hosts=(HostSpec("h0", page_bytes=4096),),
+                      devices=(DeviceSpec("d0"),),
+                      prefetch=PrefetchSpec(depth=6, overlap=True,
+                                            compute_window_s=1e-3))
+    with LMBSystem(spec) as system:
+        buf = system.buffer(name="k", device_id="d0", page_shape=PAGE,
+                            dtype=jnp_.float32, onboard_pages=4,
+                            metrics=Metrics())
+        assert buf.prefetcher is not None and buf.prefetcher.depth == 6
+        assert buf.overlap is not None
+        assert buf.overlap.window_s == pytest.approx(1e-3)
+        # explicit knobs win over spec defaults
+        buf2 = system.buffer(name="k2", device_id="d0", page_shape=PAGE,
+                             dtype=jnp_.float32, onboard_pages=4,
+                             prefetch_depth=0, metrics=Metrics())
+        assert buf2.prefetcher is None and buf2.overlap is None
+    with pytest.raises(ValueError):
+        SystemSpec(hosts=("h0",),
+                   prefetch=PrefetchSpec(depth=-1)).validate()

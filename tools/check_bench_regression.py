@@ -2,9 +2,11 @@
 
 Usage:
     python tools/check_bench_regression.py BENCH_ci.json \
-        --baseline BENCH_baseline.json [--rtol 0.25] [--min-ratio 5]
+        --baseline BENCH_baseline.json [--rtol 0.25] [--min-ratio 5] \
+        [--min-hidden 0.5]
 
-Two checks, both from ``gather_sweep`` rows:
+Three checks — two from ``gather_sweep`` rows, one from the
+``prefetch_sweep`` gate row:
 
   * **latency** — per-page gather latency of every ``batched`` row with
     batch >= 32, NORMALIZED to the same run's ``scalar`` row (the
@@ -18,6 +20,14 @@ Two checks, both from ``gather_sweep`` rows:
     scalar/batched arbiter-call ratio must stay >= ``--min-ratio``
     (default 5, the acceptance floor; the batched engine ships at >100x).
     This is machine-independent: call counts are deterministic.
+  * **overlap** — the ``prefetch_sweep.gate.hidden`` row (compute-rich
+    sequential scan with the burst-aware prefetcher) must show prefetch
+    hiding at least ``--min-hidden`` (default 0.5) of the LMB read
+    latency, beating demand-only per-page effective latency by at least
+    1.5x, with random access at parity (ratio <= 1.25 — prefetch must
+    not hurt where it cannot help).  All three figures are modeled
+    virtual-time quantities, so they are machine-independent and need
+    no committed baseline.
 
 Exit code 1 on any violation (CI fails the bench-smoke job).
 """
@@ -64,6 +74,9 @@ def main() -> int:
                     help="allowed per-page latency regression (0.25 = +25%%)")
     ap.add_argument("--min-ratio", type=float, default=5.0,
                     help="required scalar/batched meter-call ratio @ b064")
+    ap.add_argument("--min-hidden", type=float, default=0.5,
+                    help="required prefetch hidden-fraction in the "
+                         "compute-rich sequential configuration")
     args = ap.parse_args()
 
     base = load_rows(args.baseline)
@@ -100,6 +113,30 @@ def main() -> int:
         if ratio < args.min_ratio:
             failures.append(
                 f"meter-call reduction {ratio:.1f}x < {args.min_ratio}x")
+
+    pf = cur.get("prefetch_sweep.gate.hidden")
+    if pf is None:
+        failures.append("missing prefetch_sweep.gate.hidden row")
+    else:
+        hidden = derived_field(pf, "hidden")
+        speedup = derived_field(pf, "speedup")
+        rand_ratio = derived_field(pf, "rand_ratio")
+        ok = (hidden >= args.min_hidden and speedup >= 1.5
+              and rand_ratio <= 1.25)
+        verdict = "ok" if ok else "FAIL"
+        print(f"  [{verdict:4s}] prefetch gate: hidden {hidden:.3f} "
+              f"(floor {args.min_hidden:.2f}), speedup {speedup:.1f}x "
+              f"(floor 1.5x), rand parity {rand_ratio:.3f} (cap 1.25)")
+        if hidden < args.min_hidden:
+            failures.append(
+                f"prefetch hides {hidden:.3f} < {args.min_hidden} of LMB "
+                "read latency in the compute-rich configuration")
+        if speedup < 1.5:
+            failures.append(
+                f"prefetch speedup {speedup:.1f}x < 1.5x vs demand-only")
+        if rand_ratio > 1.25:
+            failures.append(
+                f"random-access parity broken: {rand_ratio:.3f} > 1.25")
 
     if failures:
         print("\nBENCH REGRESSION:", *failures, sep="\n  - ")
