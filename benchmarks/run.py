@@ -458,15 +458,30 @@ def main() -> None:
                     help=f"comma-separated subset of {sorted(BENCHES)}")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (CI perf artifact)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record spans across all benches and write a "
+                    "Chrome-trace JSON (open in ui.perfetto.dev; "
+                    "inspect with tools/lmbtrace.py)")
     args, _ = ap.parse_known_args()
     names = (args.only.split(",") if args.only else list(BENCHES))
     unknown = [n for n in names if n not in BENCHES]
     if unknown:
         ap.error(f"unknown bench(es) {unknown}; choose from "
                  f"{sorted(BENCHES)}")
+    if args.trace:
+        from repro.obs import enable_tracing
+        enable_tracing()
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()
+    if args.trace:
+        from repro.obs import GLOBAL_TRACER
+        from repro.obs.export import write_chrome_trace
+        write_chrome_trace(GLOBAL_TRACER.spans(), args.trace,
+                           extra={"benches": names,
+                                  "dropped": GLOBAL_TRACER.dropped})
+        print(f"# wrote {GLOBAL_TRACER.snapshot()['count']} spans to "
+              f"{args.trace}", file=sys.stderr)
     if args.json:
         payload = {
             "benches": names,

@@ -18,9 +18,9 @@ Layering (bottom-up):
 from repro.core.api import Allocation, LMBHost
 from repro.core.buffer import LinkedBuffer
 from repro.core.client import (DeviceSpec, ExpanderSpec, HostSpec,
-                               LMBSystem, MemoryHandle, PrefetchSpec,
-                               StaleHandle, SystemSpec, TenantSpec,
-                               system_for)
+                               LMBSystem, MemoryHandle, ObsSpec,
+                               PrefetchSpec, StaleHandle, SystemSpec,
+                               TenantSpec, system_for)
 from repro.core.fabric import (AccessDenied, DeviceClass, DeviceInfo,
                                FabricManager, make_default_fabric,
                                make_multi_fabric)
@@ -47,7 +47,7 @@ __all__ = [
     # client API (the public surface)
     "LMBSystem", "MemoryHandle", "StaleHandle", "SystemSpec",
     "ExpanderSpec", "HostSpec", "DeviceSpec", "TenantSpec",
-    "PrefetchSpec", "system_for",
+    "PrefetchSpec", "ObsSpec", "system_for",
     # prefetch + overlap scheduling
     "Prefetcher", "PrefetchRun", "OverlapScheduler",
     "exposed_latency_s", "hidden_fraction",

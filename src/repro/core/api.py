@@ -37,6 +37,7 @@ from repro.core.fabric import (AccessDenied, DeviceClass, DeviceInfo,
 from repro.core.metrics import GLOBAL_METRICS, Metrics
 from repro.core.pool import (DEFAULT_PAGE_BYTES, BlockAllocator, LMBError,
                              MediaKind, Region)
+from repro.obs.trace import SpanTracer
 
 #: HPA window where expander blocks get mapped on the host (arbitrary base
 #: chosen above typical host DRAM; purely a modeling constant).
@@ -93,6 +94,13 @@ class LMBHost:
         # afterwards), so allocator state for a dead expander is gone by
         # the time consumers handle the same failover notification
         fm.on_failover(self._on_failover)
+
+    @property
+    def trace(self) -> SpanTracer:
+        """The FM's span tracer — hosts and their LinkedBuffers share
+        it so fault/burst spans and the link.xfer spans they trigger
+        land in one trace with parent links intact."""
+        return self.fm.tracer
 
     def _on_failover(self, expander_id: int) -> None:
         """Drop allocator bookkeeping for the failed expander's blocks —
@@ -294,6 +302,14 @@ class LMBHost:
             delay += self.fm.meter_transfer(device_id, nbytes,
                                             block_id=block_id,
                                             op=op).delay_s
+        tr = self.trace
+        if tr.enabled and per_link:
+            # burst-coalescing telemetry: how many caller runs were
+            # merged into how many arbiter round-trips
+            tr.event("host.meter.burst", op=op,
+                     nbytes=sum(v[0] for v in per_link.values()),
+                     runs=len(charges), links=len(per_link),
+                     delay_s=delay, device=device_id)
         return delay
 
     def expander_of(self, mmid: int) -> int:

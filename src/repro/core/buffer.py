@@ -67,6 +67,7 @@ from repro.core.offload import TierExecutor
 from repro.core.overlap import OverlapScheduler
 from repro.core.policy import EvictionPolicy, Prefetcher, make_policy
 from repro.core.pool import OutOfMemory
+from repro.obs.trace import SpanTracer
 
 ONBOARD = "onboard"
 LMB = "lmb"
@@ -195,6 +196,15 @@ class LinkedBuffer:
         self._heat_clock = 0
 
         self._pages: List[PageEntry] = []
+
+    # ----------------------------------------------------------------- tracing
+    @property
+    def trace(self) -> SpanTracer:
+        """The FM's span tracer, read through the host so a tracer
+        attached after construction (ServeEngine, benchmarks) is seen.
+        Hot paths guard every use with ``tr.enabled`` — the scalar hit
+        path never touches this property at all."""
+        return self.host.fm.tracer
 
     # ------------------------------------------------------------------ sizing
     @property
@@ -498,6 +508,8 @@ class LinkedBuffer:
         defer the metering flush to one combined burst."""
         if k <= 0:
             return []
+        tr = self.trace
+        t0 = tr.now() if tr.enabled else 0.0
         victims = self.policy.victims(k)
         if len(victims) < k:
             raise OutOfMemory(
@@ -528,6 +540,9 @@ class LinkedBuffer:
             freed.append(slot)
         if sink is None:
             self._charge_links(charges, heat)
+        if tr.enabled:
+            tr.add("evict.batch", t0, tr.now() - t0, op="demand",
+                   nbytes=k * self.lmb_page_bytes, pages=k)
         return freed
 
     def _onboard_slot_alloc(self) -> int:
@@ -550,6 +565,8 @@ class LinkedBuffer:
                 self._prefetch_runs()
             return entry.slot
         self.metrics.record_miss(self.name, ONBOARD, self.page_bytes)
+        tr = self.trace
+        t0 = tr.now() if tr.enabled else 0.0
         slot = self._onboard_slot_alloc()
         if entry.tier == LMB:
             data = self._lmb_read(entry.slot, page)
@@ -567,6 +584,9 @@ class LinkedBuffer:
         entry.tier, entry.slot, entry.dirty = ONBOARD, slot, False
         self._onboard_owner[slot] = page
         self.policy.on_insert(page)
+        if tr.enabled:
+            tr.add("fault", t0, tr.now() - t0, op="demand",
+                   nbytes=self.page_bytes, page=page)
         if self.prefetcher:
             self.prefetcher.observe(page)
             self._prefetch_runs()
@@ -635,7 +655,13 @@ class LinkedBuffer:
         for p in guard:
             self.policy.pin(p)
         try:
-            self._fault_wave(faulting)
+            if faulting and self.trace.enabled:
+                with self.trace.span(
+                        "fault.batch", op="demand", pages=len(faulting),
+                        nbytes=len(faulting) * self.page_bytes):
+                    self._fault_wave(faulting)
+            else:
+                self._fault_wave(faulting)
         finally:
             for p in guard:
                 self.policy.unpin(p)
@@ -858,6 +884,11 @@ class LinkedBuffer:
             if requeue:
                 self.prefetcher.defer(requeue)
                 self.prefetch_deferred += len(requeue)
+                tr = self.trace
+                if tr.enabled:
+                    tr.event("prefetch.defer", op="prefetch",
+                             pages=len(requeue),
+                             nbytes=len(requeue) * self.lmb_page_bytes)
 
     def _prefetch_many(self, pages: Sequence[int]) -> None:
         """Opportunistic LMB->onboard copies bounded by FREE onboard slots
@@ -871,6 +902,8 @@ class LinkedBuffer:
         cands = cands[:len(self._onboard_free)]
         if not cands:
             return
+        tr = self.trace
+        t0 = tr.now() if tr.enabled else 0.0
         charges: List[Tuple[int, Optional[int]]] = []
         src_slots = [self._pages[p].slot for p in cands]
         data = self._read_runs(src_slots, charges)
@@ -890,6 +923,10 @@ class LinkedBuffer:
         self.prefetch_bursts += 1
         self.prefetch_pages_total += len(cands)
         self._charge_links(charges, cands, op="prefetch")
+        if tr.enabled:
+            tr.add("prefetch.burst", t0, tr.now() - t0, op="prefetch",
+                   nbytes=len(cands) * self.lmb_page_bytes,
+                   pages=len(cands))
 
     # ------------------------------------------------------------------- API
     def read(self, page: int) -> jax.Array:
@@ -1196,6 +1233,12 @@ class LinkedBuffer:
                                      f"{LMB}@{dst_expander}",
                                      n * self.lmb_page_bytes)
         self._reclaim_empty_chunks()
+        tr = self.trace
+        if tr.enabled:
+            tr.event("migrate.batch", op="migrate",
+                     expander=dst_expander, pages=len(movers),
+                     nbytes=len(movers) * self.lmb_page_bytes,
+                     sources=sorted(moved_by_home))
         return len(movers)
 
     def _reclaim_empty_chunks(self) -> None:

@@ -47,11 +47,13 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Union
 from repro.core.api import Allocation, LMBHost
 from repro.core.fabric import (DEFAULT_LINK_BW_Bps, DeviceClass, DeviceInfo,
                                FabricManager)
-from repro.core.metrics import Metrics
+from repro.core.metrics import GLOBAL_METRICS, Metrics
 from repro.core.placement import (PlacementPolicy, TenantAffinityPolicy,
                                   make_placement_policy)
 from repro.core.pool import (DEFAULT_PAGE_BYTES, Expander, LMBError,
                              MediaKind)
+from repro.obs.trace import (DEFAULT_RING_CAPACITY, GLOBAL_TRACER, Span,
+                             SpanTracer)
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.buffer import LinkedBuffer
@@ -294,6 +296,29 @@ class PrefetchSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """Observability knobs for one system (see ``repro.obs``).
+
+    ``trace=True`` mints a PRIVATE :class:`~repro.obs.trace.SpanTracer`
+    for the session and attaches it to the FM, every host, and every
+    buffer/overlap-scheduler the session builds — spans from the whole
+    data path land in one ring.  ``trace=False`` (the default) leaves
+    components on the process-wide ``GLOBAL_TRACER``, which is disabled
+    unless a harness (``benchmarks/run.py --trace``) turned it on; the
+    disabled path is a single guard check per call site.
+    """
+
+    #: record spans into a session-private tracer
+    trace: bool = False
+    #: ring-buffer span capacity (oldest spans overwritten past this)
+    trace_capacity: int = DEFAULT_RING_CAPACITY
+
+    def validate(self) -> None:
+        if self.trace_capacity < 1:
+            raise ValueError("trace_capacity must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
 class SystemSpec:
     """Everything needed to stand up one LMB stack, declaratively.
 
@@ -317,6 +342,8 @@ class SystemSpec:
     pool_gib: int = 4
     #: default prefetch/overlap knobs for buffers minted by this system
     prefetch: PrefetchSpec = dataclasses.field(default_factory=PrefetchSpec)
+    #: observability (span tracing) knobs for this system
+    obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
 
     # -- normalized views ---------------------------------------------------
     def expander_specs(self) -> List[ExpanderSpec]:
@@ -337,6 +364,7 @@ class SystemSpec:
 
     def validate(self) -> None:
         self.prefetch.validate()
+        self.obs.validate()
         hosts = self.host_specs()
         if not hosts:
             raise ValueError("SystemSpec needs at least one host")
@@ -399,6 +427,14 @@ class LMBSystem:
                                 link_bandwidth_Bps=spec.link_bandwidth_Bps,
                                 placement=policy)
         self.placement_policy = policy
+        self.metrics = metrics if metrics is not None else GLOBAL_METRICS
+        #: the session's span tracer — private when the spec asks for
+        #: tracing, else the process-wide (normally disabled) default.
+        #: Attached to the FM, whose tracer every host/buffer reads.
+        self.tracer: SpanTracer = (
+            SpanTracer(capacity=spec.obs.trace_capacity)
+            if spec.obs.trace else GLOBAL_TRACER)
+        self.fm.tracer = self.tracer
         for d in spec.devices:
             self.fm.register_device(DeviceInfo(
                 d.device_id, d.device_class, spid=d.spid,
@@ -485,7 +521,8 @@ class LMBSystem:
             tier,
             compute_window_s=(pf.compute_window_s if compute_window_s
                               is None else compute_window_s),
-            streams=pf.streams if streams is None else streams)
+            streams=pf.streams if streams is None else streams,
+            trace=self.fm.tracer)
 
     def buffer(self, *, name: str, device_id: str,
                host_id: Optional[str] = None, **kwargs) -> "LinkedBuffer":
@@ -532,7 +569,25 @@ class LMBSystem:
     def snapshot(self) -> dict:
         snap = self.fm.snapshot()
         snap["live_handles"] = len(self.live_handles())
+        # surface journal growth as registry gauges, so fleet-level
+        # telemetry sees it without holding an FM reference
+        js = snap["journal"]
+        self.metrics.gauge("fm.journal_len", js["len"])
+        for opname, n in js["by_op"].items():
+            self.metrics.gauge(f"fm.journal.{opname}", n)
+        snap["trace"] = self.tracer.snapshot()
         return snap
+
+    # ------------------------------------------------------------- tracing
+    def trace_spans(self) -> List[Span]:
+        """Spans recorded by this session's tracer (oldest first)."""
+        return self.tracer.spans()
+
+    def export_trace(self, path: str) -> None:
+        """Write this session's spans as Chrome trace-event JSON."""
+        from repro.obs.export import write_chrome_trace
+        write_chrome_trace(self.trace_spans(), path,
+                           extra={"system": repr(self)})
 
     # -------------------------------------------------------------- lifecycle
     def _ensure_open(self) -> None:
@@ -580,7 +635,8 @@ def system_for(device_id: str = "dev0", *,
                spid: Optional[int] = None,
                spare: bool = False,
                placement: Union[str, PlacementPolicy] = "least-loaded",
-               metrics: Optional[Metrics] = None) -> LMBSystem:
+               metrics: Optional[Metrics] = None,
+               obs: Optional[ObsSpec] = None) -> LMBSystem:
     """One-device convenience constructor for the overwhelmingly common
     single-host shape (launchers, benchmarks, tests)."""
     spec = SystemSpec(
@@ -589,5 +645,6 @@ def system_for(device_id: str = "dev0", *,
         hosts=(HostSpec(host_id, page_bytes=page_bytes),),
         devices=(DeviceSpec(device_id, device_class, spid=spid),),
         spare=spare,
-        placement=placement)
+        placement=placement,
+        obs=obs if obs is not None else ObsSpec())
     return LMBSystem(spec, metrics=metrics)

@@ -32,6 +32,7 @@ from repro.core.placement import (ExpanderView, PlacementPolicy,
 from repro.core.pool import (BLOCK_BYTES, BlockGrant, Expander,
                              InvalidHandle, LMBError, MediaKind,
                              OutOfMemory)
+from repro.obs.trace import GLOBAL_TRACER, SpanTracer
 from repro.qos.arbiter import LinkArbiter, TransferGrant
 
 #: default per-expander link bandwidth (matches the LMB_CXL tier's 30 GB/s)
@@ -184,6 +185,13 @@ class FabricManager:
         #: bytes metered per traffic class ("demand" | "prefetch" | ...):
         #: lets consumers prove prefetch traffic is tagged and bounded
         self._op_bytes: Dict[str, int] = {}
+        #: span tracer — every metered transfer emits one "link.xfer"
+        #: span here (the single point where op class, expander, tenant
+        #: and the modeled link delay are all known), which is what
+        #: makes trace-derived byte totals reconcile with op_bytes().
+        #: Defaults to the (disabled) global tracer; LMBSystem swaps in
+        #: a private one when SystemSpec.obs.trace is set.
+        self.tracer: SpanTracer = GLOBAL_TRACER
 
     # -- expander set --------------------------------------------------------
     @property
@@ -387,7 +395,7 @@ class FabricManager:
         arbiter snapshots — but non-demand classes (prefetch, already-
         coalesced bursts at scheduler cadence) ARE journaled, like
         migration traffic."""
-        self.device(device_id)  # InvalidHandle on unknown devices
+        info = self.device(device_id)  # InvalidHandle on unknown devices
         with self._lock:
             self._op_bytes[op] = self._op_bytes.get(op, 0) + nbytes
             if op != "demand":
@@ -395,10 +403,19 @@ class FabricManager:
                     op, device_id, block_id=block_id, detail=f"{nbytes}B"))
         eid = (self._block_home.get(block_id)
                if block_id is not None else None)
-        arb = self._arbiters.get(eid) if eid is not None else None
-        if arb is None:
-            arb = self.arbiter
-        return arb.meter(device_id, nbytes)
+        if eid is None or eid not in self._arbiters:
+            healthy = self._healthy_expanders()
+            eid = (healthy[0].expander_id if healthy
+                   else next(iter(self._expanders)))
+        grant = self._arbiters[eid].meter(device_id, nbytes)
+        tr = self.tracer
+        if tr.enabled:
+            # dur is the MODELED link delay (virtual seconds), so span
+            # sums over a trace equal the fabric's wait counters
+            tr.add("link.xfer", tr.now(), grant.delay_s, op=op,
+                   tenant=info.tenant, expander=eid, nbytes=nbytes,
+                   device=device_id)
+        return grant
 
     def op_bytes(self) -> Dict[str, int]:
         """Metered bytes per traffic class (e.g. demand vs prefetch)."""
@@ -590,6 +607,45 @@ class FabricManager:
     def healthy(self) -> bool:
         return bool(self._healthy_expanders()) or self._spare is not None
 
+    # -- journal telemetry / compaction ---------------------------------------
+    def journal_stats(self) -> Dict[str, object]:
+        """Journal growth telemetry: length + per-op-class counts."""
+        with self._lock:
+            by_op: Dict[str, int] = {}
+            for e in self.journal:
+                by_op[e.op] = by_op.get(e.op, 0) + 1
+            return {"len": len(self.journal), "by_op": by_op}
+
+    def compact(self) -> int:
+        """Fold superseded grant/release pairs out of the journal.
+
+        A ``grant`` (or failover ``regrant``) whose block was later
+        ``release``d by the same host carries no live state — replaying
+        the journal yields the same held-block set without the pair.
+        Only exactly-matched pairs are removed (most recent pending
+        grant per (host, block)); every other entry class (bind, quota,
+        bw_share, fail, promote, lost, migrate, prefetch bursts, ...)
+        is preserved verbatim and in order.  Returns the number of
+        entries removed.
+        """
+        with self._lock:
+            pending: Dict[Tuple[str, Optional[int]], List[int]] = {}
+            dead: Set[int] = set()
+            for i, e in enumerate(self.journal):
+                key = (e.host_id, e.block_id)
+                if e.op in ("grant", "regrant"):
+                    pending.setdefault(key, []).append(i)
+                elif e.op == "release":
+                    stack = pending.get(key)
+                    if stack:
+                        dead.add(stack.pop())
+                        dead.add(i)
+            if not dead:
+                return 0
+            self.journal = [e for i, e in enumerate(self.journal)
+                            if i not in dead]
+            return len(dead)
+
     # -- introspection --------------------------------------------------------
     def placement(self) -> Dict[int, int]:
         """blocks held per expander (the block→expander placement map)."""
@@ -607,6 +663,7 @@ class FabricManager:
                 "free_bytes": sum(e.free_bytes()
                                   for e in self._healthy_expanders()),
                 "journal_len": len(self.journal),
+                "journal": self.journal_stats(),
                 "healthy": self.healthy,
                 "placement_policy": self._placement.name,
                 "link": self.arbiter.snapshot(),

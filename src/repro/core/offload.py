@@ -32,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, SingleDeviceSharding
 
+from repro.obs.trace import GLOBAL_TRACER, SpanTracer
+
 DEVICE = "device"
 PINNED_HOST = "pinned_host"
 UNPINNED_HOST = "unpinned_host"
@@ -132,12 +134,16 @@ class TierExecutor:
     """
 
     def __init__(self, lmb_memory_kind: Optional[str] = None,
-                 meter: Optional[Callable[[int], float]] = None):
+                 meter: Optional[Callable[[int], float]] = None,
+                 trace: Optional[SpanTracer] = None):
         kinds = backend_memory_kinds()
         if lmb_memory_kind is None:
             lmb_memory_kind = PINNED_HOST if PINNED_HOST in kinds else DEVICE
         self.lmb_memory_kind = lmb_memory_kind
         self.real_host_tier = lmb_memory_kind != DEVICE
+        #: span tracer for coalesced pool transfers (wall-clock spans —
+        #: the executor runs real JAX ops, unlike the modeled link path)
+        self.trace = trace if trace is not None else GLOBAL_TRACER
         #: QoS hook: charged with nbytes for every page crossing the
         #: host<->device boundary (the expander-link analogue on a TPU
         #: host); typically LMBHost.meter_transfer bound to a device id.
@@ -187,6 +193,16 @@ class TierExecutor:
         """Coalesced read: ``[len(slots), *page_shape]`` stacked onboard.
         Duplicate slots are allowed (a gather may repeat pages)."""
         self._meter(pool, self._page_bytes(pool) * len(slots))
+        tr = self.trace
+        if tr.enabled:
+            with tr.span("exec.read_pages", op="demand",
+                         nbytes=self._page_bytes(pool) * len(slots),
+                         pages=len(slots), tier=tier_of(pool)):
+                return self._read_pages(pool, slots)
+        return self._read_pages(pool, slots)
+
+    def _read_pages(self, pool: jax.Array,
+                    slots: Sequence[int]) -> jax.Array:
         if len(slots) == 1:
             # basic indexing beats a 1-element gather by ~10x in eager
             # dispatch — the decode path (1 page per step) lives here
@@ -200,6 +216,16 @@ class TierExecutor:
         be distinct (scatter order over duplicates is undefined)."""
         tier = tier_of(pool)
         self._meter(pool, self._page_bytes(pool) * len(slots))
+        tr = self.trace
+        if tr.enabled:
+            with tr.span("exec.write_pages", op="demand",
+                         nbytes=self._page_bytes(pool) * len(slots),
+                         pages=len(slots), tier=tier):
+                return self._write_pages(pool, slots, pages, tier)
+        return self._write_pages(pool, slots, pages, tier)
+
+    def _write_pages(self, pool: jax.Array, slots: Sequence[int],
+                     pages: jax.Array, tier: str) -> jax.Array:
         pages = put_tier(jnp.asarray(pages), tier)
         if len(slots) == 1:
             new = pool.at[int(slots[0])].set(pages[0])

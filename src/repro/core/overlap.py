@@ -36,6 +36,7 @@ import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.tiers import TierSpec, hideable_page_bytes
+from repro.obs.trace import GLOBAL_TRACER, SpanTracer
 
 
 def exposed_latency_s(added_latency_s: float,
@@ -92,13 +93,15 @@ class OverlapScheduler:
     def __init__(self, tier: TierSpec, *,
                  compute_window_s: float = 0.0,
                  streams: int = 1,
-                 ewma_alpha: float = 0.3):
+                 ewma_alpha: float = 0.3,
+                 trace: Optional[SpanTracer] = None):
         self.tier = tier
         self.streams = max(int(streams), 1)
         self._window_s = max(compute_window_s, 0.0)
         self._alpha = ewma_alpha
         self._spent_bytes = 0
         self.stats = OverlapStats()
+        self.trace = trace if trace is not None else GLOBAL_TRACER
 
     # ------------------------------------------------------------- window
     @property
@@ -155,6 +158,13 @@ class OverlapScheduler:
         for size in run_sizes[admitted:]:
             self.stats.deferred_runs += 1
             self.stats.deferred_pages += size
+        tr = self.trace
+        if tr.enabled and run_sizes:
+            tr.event("overlap.admit", op="prefetch",
+                     nbytes=sum(charged) * page_bytes,
+                     runs=admitted, pages=sum(charged),
+                     deferred_runs=len(run_sizes) - admitted,
+                     window_s=self._window_s)
         return admitted, charged
 
     def snapshot(self) -> dict:

@@ -149,6 +149,14 @@ class MigrationEngine:
                              else "no candidate pages on the hot expander")
         self.total_pages_moved += report.pages_moved
         self.total_bytes_moved += report.bytes_moved
+        # span tracer rides on the FM (duck-typed: no core import needed;
+        # repro.obs is a dependency leaf either way)
+        tr = getattr(self.fm, "tracer", None)
+        if tr is not None and tr.enabled and report.triggered:
+            tr.event("migration.round", op="migrate",
+                     nbytes=report.bytes_moved, expander=dst,
+                     pages=report.pages_moved, src=src,
+                     src_util=utils[src], dst_util=utils[dst])
         return report
 
     def stats(self) -> dict:

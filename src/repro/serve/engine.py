@@ -32,6 +32,7 @@ import numpy as np
 from repro.core.api import LMBHost
 from repro.core.client import LMBSystem
 from repro.models.zoo import Model
+from repro.obs.trace import DEFAULT_RING_CAPACITY, SpanTracer
 from repro.qos.slo import AdmissionController, Decision
 from repro.serve.kv_cache import PagedKVStore
 
@@ -47,6 +48,7 @@ class Request:
     state: str = "waiting"             # waiting|active|preempted|done|shed
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
+    last_token_at: Optional[float] = None
     done_at: Optional[float] = None
 
 
@@ -68,6 +70,13 @@ class EngineConfig:
     #: initial compute-window estimate for the overlap scheduler; the
     #: engine refines it with measured decode-round times
     kv_compute_window_s: float = 1e-3
+    #: record spans (serve rounds, TTFT/token events, the KV data path)
+    #: into a private tracer attached to the engine's fabric — unless
+    #: the fabric already carries an enabled tracer (LMBSystem with
+    #: ObsSpec.trace, or benchmarks' global tracer), which is reused
+    trace: bool = False
+    #: ring capacity of the engine-minted tracer
+    trace_capacity: int = DEFAULT_RING_CAPACITY
 
 
 class ServeEngine:
@@ -87,6 +96,15 @@ class ServeEngine:
         self.qos = qos
         self.shed: List[int] = []
         self._tenant_live: Dict[str, int] = {}   # in-flight reqs per tenant
+        self.metrics = host.metrics
+        # tracing: reuse an already-enabled fabric tracer (session/global)
+        # or, when the config asks, mint one and attach it to the fabric
+        # BEFORE the KV store builds its LinkedBuffer, so the whole KV
+        # data path records into the same ring as the serve rounds
+        self.trace: SpanTracer = host.fm.tracer
+        if ecfg.trace and not self.trace.enabled:
+            self.trace = SpanTracer(capacity=ecfg.trace_capacity)
+            host.fm.tracer = self.trace
         overlap = None
         if ecfg.kv_prefetch and ecfg.kv_prefetch_depth:
             # admission gate for prefetch bursts: sized to the decode
@@ -95,7 +113,8 @@ class ServeEngine:
             from repro.core.tiers import TierKind, tpu_tiers
             overlap = OverlapScheduler(
                 tpu_tiers()[TierKind.HOST_DRAM],
-                compute_window_s=ecfg.kv_compute_window_s)
+                compute_window_s=ecfg.kv_compute_window_s,
+                trace=self.trace)
         self.kv = PagedKVStore(
             cfg=model.cfg, host=host, device_id=device_id,
             page_tokens=ecfg.page_tokens, onboard_pages=ecfg.onboard_pages,
@@ -148,6 +167,13 @@ class ServeEngine:
         req.out_tokens.append(nxt)
         if req.first_token_at is None:
             req.first_token_at = time.monotonic()
+            req.last_token_at = req.first_token_at
+            ttft = req.first_token_at - req.submitted_at
+            self.metrics.observe(f"serve.ttft.{req.tenant}", ttft)
+            tr = self.trace
+            if tr.enabled:
+                tr.event("ttft", tenant=req.tenant, op="serve",
+                         req=req.req_id, ttft_s=ttft)
 
     def _cache_to_pages(self, cache, length: int):
         if "k" not in cache:
@@ -218,7 +244,17 @@ class ServeEngine:
         into one decode_step with the paged-attention kernel.  With
         ``kv_prefetch`` on, the round's next-decode KV pages are
         scheduled ahead as bursts, and the measured decode time feeds
-        the overlap scheduler's compute-window estimate."""
+        the overlap scheduler's compute-window estimate.  When tracing
+        is on, the round runs under a ``serve.round`` span whose
+        children carry per-sequence TTFT and inter-token events."""
+        tr = self.trace
+        if not tr.enabled:
+            return self._step_impl()
+        with tr.span("serve.round", op="serve", active=len(self.active),
+                     waiting=len(self.waiting)):
+            return self._step_impl()
+
+    def _step_impl(self) -> int:
         self._admit()
         if self.ecfg.kv_prefetch:
             self._schedule_round_prefetch()
@@ -230,6 +266,15 @@ class ServeEngine:
                                                  tok)
             nxt = int(np.argmax(np.asarray(logits[0])))
             req.out_tokens.append(nxt)
+            now = time.monotonic()
+            if req.last_token_at is not None:
+                gap = now - req.last_token_at
+                self.metrics.observe(f"serve.itl.{req.tenant}", gap)
+                tr = self.trace
+                if tr.enabled:
+                    tr.event("token", tenant=req.tenant, op="serve",
+                             req=req.req_id, gap_s=gap)
+            req.last_token_at = now
             kv_new = self._decode_kv_tail(req._cache)
             if kv_new is not None:
                 self.kv.append_tokens(req.seq_id, kv_new)
@@ -279,12 +324,22 @@ class ServeEngine:
         ttft = [r.first_token_at - r.submitted_at for r in done
                 if r.first_token_at]
         fm = self.kv.buf.host.fm
+        # per-tenant latency distributions from the unified registry:
+        # serve.ttft.<tenant> / serve.itl.<tenant> histograms with
+        # p50/p90/p99 — the numbers the serve-sweep reports against
+        hists = self.metrics.snapshot()["histograms"]
+        latency = {name: snap for name, snap in sorted(hists.items())
+                   if name.startswith("serve.")}
+        self.metrics.gauge("fm.journal_len",
+                           fm.journal_stats()["len"])
         return {
             "done": len(done),
             "waiting": len(self.waiting),
             "active": len(self.active),
             "shed": len(self.shed),
             "mean_ttft_s": float(np.mean(ttft)) if ttft else None,
+            "latency": latency,
+            "trace": self.trace.snapshot(),
             "kv": self.kv.stats(),
             "qos": self.qos.snapshot() if self.qos else None,
             # pooled-fabric placement: which expander backs the engine's KV

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core.overlap import exposed_latency_s
 from repro.core.tiers import congested_latency
+from repro.obs.trace import GLOBAL_TRACER
 from repro.qos.arbiter import jain_fairness, weighted_max_min
 from repro.qos.migration import plan_rebalance
 from repro.sim.ssd import Scheme, SSDSpec
@@ -155,7 +156,7 @@ def simulate(spec: SSDSpec, scheme: Scheme, workload: Workload,
 
     wall = t_end
     iops = n / wall
-    return SimResult(
+    result = SimResult(
         scheme=scheme.name, workload=workload.name, device=spec.name,
         n_ios=n, wall_s=wall, iops=iops,
         bandwidth_MBps=iops * workload.io_bytes / 1e6,
@@ -163,6 +164,16 @@ def simulate(spec: SSDSpec, scheme: Scheme, workload: Workload,
         p99_lat_us=float(np.percentile(lat, 99) * 1e6),
         index_hit_ratio=float(hits.mean()) if needs_index else 1.0,
     )
+    tr = GLOBAL_TRACER
+    if tr.enabled:
+        # one summary span per simulated run (dur = VIRTUAL wall time,
+        # like the link.xfer convention) so benchmark traces show the
+        # fig6/fabric sweeps alongside the live-system spans
+        tr.add("sim.run", tr.now(), wall, op="sim",
+               nbytes=n * workload.io_bytes, scheme=scheme.name,
+               workload=workload.name, device=spec.name,
+               iops=round(iops), p99_us=round(result.p99_lat_us, 2))
+    return result
 
 
 # ---------------------------------------------------------------------------

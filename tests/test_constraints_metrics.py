@@ -49,6 +49,62 @@ class TestMetrics:
         assert c.bytes_out == 4096
         assert m.tier("kv", "lmb").bytes_in == 4096
         snap = m.snapshot()
-        assert snap["kv"]["onboard"]["hits"] == 2
+        assert snap["tiers"]["kv"]["onboard"]["hits"] == 2
         m.reset()
         assert m.tier("kv", "onboard").accesses == 0
+
+    def test_hit_miss_record_bytes(self):
+        """record_hit/record_miss must credit nbytes (regression: the
+        arguments used to be accepted and dropped)."""
+        m = Metrics()
+        m.record_hit("kv", "onboard", nbytes=4096)
+        m.record_miss("kv", "onboard", nbytes=512)
+        c = m.tier("kv", "onboard")
+        assert c.bytes_hit == 4096
+        assert c.bytes_missed == 512
+        snap = m.snapshot()["tiers"]["kv"]["onboard"]
+        assert snap["bytes_hit"] == 4096
+        assert snap["bytes_missed"] == 512
+
+    def test_event_ring_is_bounded(self):
+        """Regression: the event log used to be an unbounded list."""
+        m = Metrics(max_events=8)
+        for i in range(100):
+            m.event("dev0", f"alloc mmid={i}")
+        assert m.snapshot()["events"] == {
+            "count": 8, "capacity": 8, "total": 100}
+        # the ring keeps the most recent events
+        assert m._events[-1][2] == "alloc mmid=99"
+
+    def test_counters_gauges_histograms(self):
+        m = Metrics()
+        m.inc("faults")
+        m.inc("faults", 2)
+        m.gauge("depth", 7.0)
+        m.observe("wait_s", 1e-3)
+        m.observe("wait_s", 2e-3)
+        snap = m.snapshot()
+        assert snap["counters"]["faults"] == 3
+        assert snap["gauges"]["depth"] == 7.0
+        h = snap["histograms"]["wait_s"]
+        assert h["count"] == 2
+        assert h["min"] == pytest.approx(1e-3)
+
+    def test_merge(self):
+        a, b = Metrics(), Metrics()
+        a.record_hit("kv", "onboard", nbytes=10)
+        b.record_hit("kv", "onboard", nbytes=20)
+        b.record_miss("kv", "lmb")
+        a.inc("n", 1)
+        b.inc("n", 2)
+        a.observe("w", 1.0)
+        b.observe("w", 3.0)
+        b.event("d0", "free mmid=1")
+        a.merge(b)
+        assert a.tier("kv", "onboard").hits == 2
+        assert a.tier("kv", "onboard").bytes_hit == 30
+        assert a.tier("kv", "lmb").misses == 1
+        snap = a.snapshot()
+        assert snap["counters"]["n"] == 3
+        assert snap["histograms"]["w"]["count"] == 2
+        assert snap["events"]["count"] == 1

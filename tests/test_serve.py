@@ -164,3 +164,52 @@ def test_qos_admission_shed_and_slo_feedback(served):
     assert t["abuser"]["shed_count"] == 1
     assert t["gold"]["observed_p99_s"] is not None   # latency fed back
     assert not t["gold"]["admitted"]                 # released on drain
+
+
+def test_per_tenant_latency_attribution(served):
+    """Engine-level tracing: every tenant gets its own TTFT and
+    inter-token histograms, and ttft/token spans carry the tenant tag."""
+    eng = make_engine(served, trace=True)
+    rng = np.random.default_rng(0)
+    rids = {}
+    for i in range(4):
+        tenant = f"t{i % 2}"
+        rids.setdefault(tenant, []).append(
+            eng.submit(rng.integers(0, 100, 12), max_new_tokens=4,
+                       tenant=tenant))
+    eng.run(200)
+    st = eng.stats()
+    for tenant, ids in rids.items():
+        assert all(eng.requests[r].state == "done" for r in ids)
+        ttft = st["latency"][f"serve.ttft.{tenant}"]
+        itl = st["latency"][f"serve.itl.{tenant}"]
+        assert ttft["count"] == len(ids)          # one TTFT per request
+        # 4 new tokens -> first is TTFT, the other 3 are gaps
+        assert itl["count"] == 3 * len(ids)
+        assert 0 < ttft["p50"] <= ttft["p99"]
+        assert 0 < itl["p50"] <= itl["p99"]
+    # the span stream attributes the same events per tenant
+    spans = eng.trace.spans()
+    assert any(s.name == "serve.round" for s in spans)
+    for tenant, ids in rids.items():
+        ttft_spans = [s for s in spans
+                      if s.name == "ttft" and s.tenant == tenant]
+        tok_spans = [s for s in spans
+                     if s.name == "token" and s.tenant == tenant]
+        assert len(ttft_spans) == len(ids)
+        assert len(tok_spans) == 3 * len(ids)
+        assert {s.args["req"] for s in ttft_spans} == set(ids)
+    assert st["trace"]["enabled"] and st["trace"]["count"] == len(spans)
+
+
+def test_tracing_off_by_default(served):
+    """EngineConfig.trace=False must leave the engine on the disabled
+    global tracer and record nothing."""
+    eng = make_engine(served)
+    rng = np.random.default_rng(0)
+    eng.submit(rng.integers(0, 100, 8), max_new_tokens=2)
+    eng.run(50)
+    assert not eng.trace.enabled
+    assert len(eng.trace.spans()) == 0
+    # per-tenant histograms still collect (cheap, always on)
+    assert eng.stats()["latency"]["serve.ttft.default"]["count"] == 1

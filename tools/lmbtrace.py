@@ -1,0 +1,172 @@
+"""Inspect LMB trace artifacts (Chrome-trace JSON or span JSONL).
+
+Usage:
+    python tools/lmbtrace.py summary TRACE.json
+    python tools/lmbtrace.py diff OLD.json NEW.json
+
+``summary`` prints the figures the paper's evaluation turns on, straight
+from the span stream:
+
+  * span counts per name (fault / evict.batch / prefetch.burst / ...),
+  * per-op-class byte totals over ``link.xfer`` spans — these reconcile
+    exactly with ``FabricManager.op_bytes()`` because both accrue at the
+    same arbiter call,
+  * the hidden fraction: prefetch link seconds over total link seconds
+    (durations of ``link.xfer`` spans are MODELED virtual delay, so the
+    figure is machine-independent),
+  * per-tenant link-wait p50/p99 over ``link.xfer`` spans carrying a
+    tenant tag.
+
+``diff`` prints the same summary for two traces side by side with
+deltas — the before/after view for an optimization PR.
+
+Exit code 1 if the trace is empty or unreadable (CI smoke gate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.obs.export import load_trace  # noqa: E402
+from repro.obs.trace import Span  # noqa: E402
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{int(n)} B"
+        n /= 1024
+    return f"{n:.1f} GiB"
+
+
+def summarize(spans: List[Span]) -> dict:
+    """The summary dict ``summary``/``diff`` render (and tests assert)."""
+    names: Dict[str, int] = {}
+    op_bytes: Dict[str, int] = {}
+    op_secs: Dict[str, float] = {}
+    tenant_waits: Dict[str, List[float]] = {}
+    for s in spans:
+        names[s.name] = names.get(s.name, 0) + 1
+        if s.name != "link.xfer":
+            continue
+        op = s.op or "unknown"
+        op_bytes[op] = op_bytes.get(op, 0) + s.nbytes
+        op_secs[op] = op_secs.get(op, 0.0) + s.dur
+        if s.tenant is not None:
+            tenant_waits.setdefault(s.tenant, []).append(s.dur)
+    total_s = sum(op_secs.values())
+    hidden = (op_secs.get("prefetch", 0.0) / total_s) if total_s else None
+    tenants = {}
+    for tenant, waits in sorted(tenant_waits.items()):
+        arr = np.asarray(waits)
+        tenants[tenant] = {
+            "n": len(waits),
+            "p50_s": float(np.percentile(arr, 50)),
+            "p99_s": float(np.percentile(arr, 99)),
+        }
+    return {
+        "spans": len(spans),
+        "names": dict(sorted(names.items())),
+        "op_bytes": dict(sorted(op_bytes.items())),
+        "op_secs": dict(sorted(op_secs.items())),
+        "hidden_fraction": hidden,
+        "tenants": tenants,
+    }
+
+
+def print_summary(summary: dict, label: Optional[str] = None) -> None:
+    if label:
+        print(f"== {label} ==")
+    print(f"spans: {summary['spans']}")
+    for name, n in summary["names"].items():
+        print(f"  {name:<20s} {n}")
+    if summary["op_bytes"]:
+        print("link bytes by op class (== FabricManager.op_bytes()):")
+        for op, nb in summary["op_bytes"].items():
+            secs = summary["op_secs"][op]
+            print(f"  {op:<10s} {_fmt_bytes(nb):>12s}  "
+                  f"{secs * 1e3:8.3f} ms modeled")
+    if summary["hidden_fraction"] is not None:
+        print(f"hidden fraction (prefetch link-s / total link-s): "
+              f"{summary['hidden_fraction']:.3f}")
+    if summary["tenants"]:
+        print("per-tenant link wait:")
+        for tenant, t in summary["tenants"].items():
+            print(f"  {tenant:<12s} n={t['n']:<6d} "
+                  f"p50={t['p50_s'] * 1e6:9.2f} us  "
+                  f"p99={t['p99_s'] * 1e6:9.2f} us")
+
+
+def _delta(old: Optional[float], new: Optional[float]) -> str:
+    if old is None or new is None:
+        return "n/a"
+    if old == 0:
+        return "n/a" if new == 0 else "+inf"
+    return f"{(new - old) / old * 100:+.1f}%"
+
+
+def print_diff(old: dict, new: dict) -> None:
+    print(f"{'metric':<32s} {'old':>14s} {'new':>14s} {'delta':>8s}")
+    print(f"{'spans':<32s} {old['spans']:>14d} {new['spans']:>14d} "
+          f"{_delta(old['spans'], new['spans']):>8s}")
+    for op in sorted(set(old["op_bytes"]) | set(new["op_bytes"])):
+        o, n = old["op_bytes"].get(op, 0), new["op_bytes"].get(op, 0)
+        print(f"{'bytes.' + op:<32s} {_fmt_bytes(o):>14s} "
+              f"{_fmt_bytes(n):>14s} {_delta(o, n):>8s}")
+    for op in sorted(set(old["op_secs"]) | set(new["op_secs"])):
+        o = old["op_secs"].get(op, 0.0)
+        n = new["op_secs"].get(op, 0.0)
+        print(f"{'link_s.' + op:<32s} {o:>14.6f} {n:>14.6f} "
+              f"{_delta(o, n):>8s}")
+    o, n = old["hidden_fraction"], new["hidden_fraction"]
+    print(f"{'hidden_fraction':<32s} "
+          f"{('%.3f' % o) if o is not None else 'n/a':>14s} "
+          f"{('%.3f' % n) if n is not None else 'n/a':>14s} "
+          f"{_delta(o, n):>8s}")
+    for tenant in sorted(set(old["tenants"]) | set(new["tenants"])):
+        for q in ("p50_s", "p99_s"):
+            o = old["tenants"].get(tenant, {}).get(q)
+            n = new["tenants"].get(tenant, {}).get(q)
+            print(f"{'wait.' + tenant + '.' + q:<32s} "
+                  f"{(o if o is not None else float('nan')):>14.6g} "
+                  f"{(n if n is not None else float('nan')):>14.6g} "
+                  f"{_delta(o, n):>8s}")
+
+
+def _load(path: str) -> List[Span]:
+    try:
+        spans = load_trace(path)
+    except (OSError, ValueError) as e:
+        raise SystemExit(f"cannot read trace {path!r}: {e}")
+    if not spans:
+        raise SystemExit(f"trace {path!r} contains no spans")
+    return spans
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p_sum = sub.add_parser("summary", help="summarize one trace")
+    p_sum.add_argument("trace")
+    p_diff = sub.add_parser("diff", help="compare two traces")
+    p_diff.add_argument("old")
+    p_diff.add_argument("new")
+    args = ap.parse_args(argv)
+    if args.cmd == "summary":
+        print_summary(summarize(_load(args.trace)), label=args.trace)
+    else:
+        old, new = summarize(_load(args.old)), summarize(_load(args.new))
+        print_diff(old, new)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
