@@ -1,20 +1,28 @@
-"""Benchmark harness — one function per paper table/figure.
+"""Benchmark harness — one scenario per paper table/figure or sweep.
 
 Prints ``name,us_per_call,derived`` CSV rows.
 Run: ``PYTHONPATH=src python -m benchmarks.run`` (or ``--only fig6``).
 ``--only`` takes a comma-separated list; ``--json PATH`` additionally
 writes the rows as JSON (CI uploads ``BENCH_ci.json`` per PR so the perf
 trajectory is tracked).
+
+Scenarios self-register with the :func:`scenario` decorator.  A scenario
+that wants CI to gate on its output declares :class:`Gate` rows inline —
+``--json`` embeds them in the payload and
+``tools/check_bench_regression.py`` enforces them, so adding a gated
+sweep never means hand-wiring a new key into the checker.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import platform
 import sys
 import time
+from typing import Callable, Dict, Optional, Tuple
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -30,7 +38,49 @@ def _row(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.3f},{derived}")
 
 
+# --------------------------------------------------------------------------
+# Scenario registry
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    """One regression-gate bound a scenario declares on its own rows.
+
+    ``row`` names an emitted row, ``field`` a ``key=value`` entry in its
+    ``derived`` column; the checker fails CI when the value leaves
+    ``[min, max]``.  Bounds should be machine-independent (modeled /
+    virtual-time / count figures), since they gate every runner.
+    """
+
+    row: str
+    field: str
+    min: Optional[float] = None
+    max: Optional[float] = None
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    fn: Callable[[], None]
+    gates: Tuple[Gate, ...] = ()
+
+
+#: name -> Scenario, in registration (= declaration) order
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def scenario(name: str, gate: Tuple[Gate, ...] = ()):
+    """Register a benchmark scenario (optionally with its CI gate rows)."""
+    def deco(fn: Callable[[], None]) -> Callable[[], None]:
+        if name in SCENARIOS:
+            raise ValueError(f"duplicate scenario {name!r}")
+        SCENARIOS[name] = Scenario(name, fn, tuple(gate))
+        return fn
+    return deco
+
+
 # ----------------------------------------------------------- Fig 2: tiers
+@scenario("fig2")
 def bench_fig2_latency() -> None:
     """Paper Fig 2: estimated access latencies per tier."""
     from repro.core.tiers import paper_tiers
@@ -40,6 +90,7 @@ def bench_fig2_latency() -> None:
 
 
 # ------------------------------------------------------------- Fig 6: sim
+@scenario("fig6")
 def bench_fig6() -> None:
     """Paper Fig 6 (a)+(b): Ideal/DFTL/LMB-CXL/LMB-PCIe x 4 workloads."""
     from repro.sim import make_ssd_model, make_workload, simulate
@@ -61,6 +112,7 @@ def bench_fig6() -> None:
 
 
 # --------------------------------------- shared-fabric sweep (repro.qos)
+@scenario("fabric_sweep")
 def bench_fabric_sweep() -> None:
     """1->16 devices on ONE expander: aggregate throughput saturates at
     link bandwidth, equal-weight devices split it fairly, and a 2:1-weight
@@ -97,6 +149,7 @@ def bench_fabric_sweep() -> None:
 
 
 # --------------------------------- multi-expander hot/cold migration sweep
+@scenario("migration_sweep")
 def bench_migration_sweep() -> None:
     """1 hot expander + 1 cold: every device starts on expander 0; hot-page
     migration rebalances the pool and the hot expander's p99 index latency
@@ -155,6 +208,10 @@ def bench_migration_sweep() -> None:
 
 
 # ------------------------------------------- batched data path (gather)
+@scenario("gather_sweep", gate=(
+    Gate("gather_sweep.meter_reduction.b064", "ratio", min=5,
+         note="batched path must cut arbiter calls >=5x at batch 64"),
+))
 def bench_gather_sweep() -> None:
     """Batched vs scalar LMB data path, batch 1 -> 256: per-page gather
     latency (us_per_call column) and arbiter round-trips, onboard-hit vs
@@ -220,6 +277,16 @@ def bench_gather_sweep() -> None:
 
 
 # ------------------------------------------- burst-aware prefetch sweep
+@scenario("prefetch_sweep", gate=(
+    Gate("prefetch_sweep.gate.hidden", "hidden", min=0.5,
+         note="compute-rich sequential prefetch must hide >=50% of "
+              "LMB read latency"),
+    Gate("prefetch_sweep.gate.hidden", "speedup", min=1.5,
+         note="prefetch must beat demand paging per-page"),
+    Gate("prefetch_sweep.gate.hidden", "rand_ratio", max=1.25,
+         note="random access must stay at parity (prefetch can't help "
+              "but must not hurt)"),
+))
 def bench_prefetch_sweep() -> None:
     """Burst-aware prefetch + overlap scheduling vs demand-only paging:
     depth x access pattern x compute intensity.  Each cell streams a
@@ -315,6 +382,7 @@ def bench_prefetch_sweep() -> None:
 
 
 # --------------------------------------------------- §4.1.2 locality sweep
+@scenario("locality")
 def bench_locality_sweep() -> None:
     """Hot-index hit ratio -> throughput recovery (paper §4.1.2 claim)."""
     from repro.sim import make_ssd_model, make_workload, simulate
@@ -332,6 +400,7 @@ def bench_locality_sweep() -> None:
 
 
 # ------------------------------------------------------ allocator (§3.2)
+@scenario("allocator")
 def bench_allocator() -> None:
     """alloc/free/share microbench on the capability client API."""
     from repro.core import (DeviceSpec, HostSpec, LMBSystem, SystemSpec)
@@ -360,6 +429,7 @@ def bench_allocator() -> None:
 
 
 # --------------------------------------- offload overlap (TPU adaptation)
+@scenario("offload")
 def bench_offload_overlap() -> None:
     """Bytes the LMB tier can page per step hidden behind compute (tier
     model), plus measured LinkedBuffer fault cost on this host."""
@@ -389,6 +459,7 @@ def bench_offload_overlap() -> None:
 
 
 # ---------------------------------------------------- roofline (dry-run)
+@scenario("roofline")
 def bench_roofline_report() -> None:
     """Summarize dryrun_results.json (run launch/dryrun.py first)."""
     path = os.environ.get("DRYRUN_JSON", "dryrun_results.json")
@@ -408,6 +479,7 @@ def bench_roofline_report() -> None:
 
 
 # ------------------------------------------------------------ serve perf
+@scenario("serve")
 def bench_serving() -> None:
     """Engine throughput on the reduced model (CPU demo scale)."""
     import jax
@@ -415,7 +487,7 @@ def bench_serving() -> None:
     from repro.core import system_for
     from repro.models import build_model
     from repro.models.flags import Flags
-    from repro.serve import EngineConfig, ServeEngine
+    from repro.serve import EngineConfig, ServeEngine, SubmitSpec
     cfg = get_config("qwen2-1.5b").reduced()
     model = build_model(cfg, Flags(remat=False))
     params = model.init(jax.random.key(0))
@@ -426,8 +498,9 @@ def bench_serving() -> None:
     rng = np.random.default_rng(0)
     n_req, n_tok = 8, 8
     for _ in range(n_req):
-        eng.submit(rng.integers(0, cfg.vocab_size, 12),
-                   max_new_tokens=n_tok)
+        eng.submit(SubmitSpec(
+            prompt=rng.integers(0, cfg.vocab_size, 12),
+            max_new_tokens=n_tok))
     t0 = time.perf_counter()
     eng.run(500)
     wall = time.perf_counter() - t0
@@ -437,25 +510,109 @@ def bench_serving() -> None:
          f"kv_hit={st['kv']['hit_ratio']:.2f}")
 
 
-BENCHES = {
-    "fig2": bench_fig2_latency,
-    "fig6": bench_fig6,
-    "fabric_sweep": bench_fabric_sweep,
-    "migration_sweep": bench_migration_sweep,
-    "gather_sweep": bench_gather_sweep,
-    "prefetch_sweep": bench_prefetch_sweep,
-    "locality": bench_locality_sweep,
-    "allocator": bench_allocator,
-    "offload": bench_offload_overlap,
-    "roofline": bench_roofline_report,
-    "serve": bench_serving,
-}
+# ---------------------------------------------- trace-driven serve sweep
+@scenario("serve_sweep", gate=(
+    Gate("serve_sweep.gate.pipeline", "tokens_equal", min=1,
+         note="pipelined step must emit byte-identical tokens to the "
+              "phased reference order"),
+    Gate("serve_sweep.gate.pipeline", "wait_ratio", min=1.2,
+         note="pipelining must strictly reduce modeled exposed link "
+              "wait vs the phased order"),
+    Gate("serve_sweep.tenant.steady", "ttft_p99_ms", max=40,
+         note="virtual-time TTFT p99 bound, Poisson tenant"),
+    Gate("serve_sweep.tenant.steady", "itl_p99_ms", max=6,
+         note="virtual-time inter-token p99 bound, Poisson tenant"),
+    Gate("serve_sweep.tenant.bursty", "ttft_p99_ms", max=80,
+         note="virtual-time TTFT p99 bound, bursty tenant (queueing "
+              "under bursts is expected, but bounded)"),
+    Gate("serve_sweep.tenant.bursty", "itl_p99_ms", max=6,
+         note="virtual-time inter-token p99 bound, bursty tenant"),
+))
+def bench_serve_sweep() -> None:
+    """Trace-driven multi-tenant load sweep on the serve engine: a
+    Poisson tenant and a bursty tenant share one engine whose KV pages
+    against the LMB pool.  The engine runs on a VIRTUAL clock with a
+    pinned round duration, so every latency row (TTFT / inter-token
+    p50/p99, straight from ``ServeEngine.stats()['latency']``) is a
+    modeled, machine-independent figure CI can gate on.  A second,
+    phased-order twin replays the identical trace to check the
+    pipelined step's contract: byte-identical tokens, strictly less
+    modeled exposed link wait.  ``SERVE_SWEEP_SCALE=N`` multiplies
+    per-tenant request counts for offline full-scale runs."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.core import system_for
+    from repro.core.metrics import Metrics
+    from repro.models import build_model
+    from repro.models.flags import Flags
+    from repro.serve import (EngineConfig, ServeEngine, TenantLoad,
+                             VirtualClock, build_trace, run_sweep)
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    model = build_model(cfg, Flags(remat=False))
+    params = model.init(jax.random.key(0))
+    round_s = 2e-3
+
+    def make_engine(clock, *, pipeline):
+        # per-engine Metrics: the A/B twin must not share histograms
+        system = system_for("tpu0", host_id="h0", pool_gib=1,
+                            page_bytes=4096, metrics=Metrics())
+        return ServeEngine(model, params, system, EngineConfig(
+            decode_slots=4, max_seq_len=64, page_tokens=8,
+            onboard_pages=6, prefill_bucket=16, pipeline=pipeline,
+            round_time_s=round_s), clock=clock)
+
+    scale = int(os.environ.get("SERVE_SWEEP_SCALE", "1"))
+    tenants = [
+        TenantLoad("steady", rate_rps=150.0, n_requests=12 * scale,
+                   prompt_tokens=(12, 28), max_new_tokens=(4, 8)),
+        TenantLoad("bursty", rate_rps=150.0, n_requests=12 * scale,
+                   process="bursty", burst_size=6,
+                   prompt_tokens=(12, 28), max_new_tokens=(4, 8)),
+    ]
+    trace = build_trace(tenants, vocab_size=cfg.vocab_size, seed=0)
+    clock = VirtualClock()
+    eng = make_engine(clock, pipeline=True)
+    t0 = time.perf_counter()
+    report = run_sweep(eng, trace, clock)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    tot = report.totals
+    for name, row in sorted(report.per_tenant.items()):
+        _row(f"serve_sweep.tenant.{name}", 0.0,
+             f"done={row['done']};shed={row['shed']};"
+             f"ttft_p50_ms={row['ttft_p50_s'] * 1e3:.3f};"
+             f"ttft_p99_ms={row['ttft_p99_s'] * 1e3:.3f};"
+             f"itl_p50_ms={row['itl_p50_s'] * 1e3:.3f};"
+             f"itl_p99_ms={row['itl_p99_s'] * 1e3:.3f}")
+    _row("serve_sweep.totals", wall_us / max(tot["rounds"], 1),
+         f"rounds={tot['rounds']};virtual_s={tot['virtual_s']:.3f};"
+         f"done={tot['done']};shed={tot['shed']};"
+         f"peak_concurrent={tot['peak_concurrent']};"
+         f"peak_lmb_pages={tot['peak_lmb_resident_pages']};"
+         f"exposed_us={tot['exposed_link_wait_s'] * 1e6:.2f};"
+         f"hidden_us={tot['hidden_link_wait_s'] * 1e6:.2f};"
+         f"kv_hit={tot['kv_hit_ratio']:.3f};"
+         f"meter_calls={tot['meter_calls']}")
+    # phased-order twin on the IDENTICAL trace: the pipelined step's
+    # contract is byte-identical tokens with strictly less exposed wait
+    clock2 = VirtualClock()
+    eng2 = make_engine(clock2, pipeline=False)
+    run_sweep(eng2, trace, clock2)
+    toks = {r.req_id: tuple(r.out_tokens) for r in eng.requests.values()}
+    toks2 = {r.req_id: tuple(r.out_tokens) for r in eng2.requests.values()}
+    exposed_pipe = eng.kv.buf.link_wait_s
+    exposed_phased = eng2.kv.buf.link_wait_s
+    _row("serve_sweep.gate.pipeline", 0.0,
+         f"tokens_equal={int(toks == toks2)};"
+         f"wait_ratio={exposed_phased / max(exposed_pipe, 1e-12):.2f};"
+         f"exposed_pipelined_us={exposed_pipe * 1e6:.2f};"
+         f"exposed_phased_us={exposed_phased * 1e6:.2f}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help=f"comma-separated subset of {sorted(BENCHES)}")
+                    help=f"comma-separated subset of {sorted(SCENARIOS)}")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (CI perf artifact)")
     ap.add_argument("--trace", default=None, metavar="PATH",
@@ -463,17 +620,17 @@ def main() -> None:
                     "Chrome-trace JSON (open in ui.perfetto.dev; "
                     "inspect with tools/lmbtrace.py)")
     args, _ = ap.parse_known_args()
-    names = (args.only.split(",") if args.only else list(BENCHES))
-    unknown = [n for n in names if n not in BENCHES]
+    names = (args.only.split(",") if args.only else list(SCENARIOS))
+    unknown = [n for n in names if n not in SCENARIOS]
     if unknown:
-        ap.error(f"unknown bench(es) {unknown}; choose from "
-                 f"{sorted(BENCHES)}")
+        ap.error(f"unknown scenario(s) {unknown}; choose from "
+                 f"{sorted(SCENARIOS)}")
     if args.trace:
         from repro.obs import enable_tracing
         enable_tracing()
     print("name,us_per_call,derived")
     for n in names:
-        BENCHES[n]()
+        SCENARIOS[n].fn()
     if args.trace:
         from repro.obs import GLOBAL_TRACER
         from repro.obs.export import write_chrome_trace
@@ -488,6 +645,10 @@ def main() -> None:
             "python": platform.python_version(),
             "platform": platform.platform(),
             "rows": _ROWS,
+            # every gate the scenarios that RAN declared — the checker
+            # enforces these generically (no hand-wired keys)
+            "gates": [dataclasses.asdict(g) for n in names
+                      for g in SCENARIOS[n].gates],
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

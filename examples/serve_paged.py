@@ -19,7 +19,7 @@ from repro.configs.base import get_config
 from repro.core import DeviceSpec, HostSpec, LMBSystem, SystemSpec
 from repro.models import build_model
 from repro.models.flags import Flags
-from repro.serve import EngineConfig, ServeEngine
+from repro.serve import EngineConfig, ServeEngine, SubmitSpec
 
 cfg = get_config("h2o-danube-3-4b").reduced()
 model = build_model(cfg, Flags(remat=False))
@@ -36,8 +36,9 @@ eng = ServeEngine(model, params, system, EngineConfig(
     prefill_bucket=16))
 
 rng = np.random.default_rng(0)
-rids = [eng.submit(rng.integers(0, cfg.vocab_size, int(n)),
-                   max_new_tokens=8)
+rids = [eng.submit(SubmitSpec(
+            prompt=rng.integers(0, cfg.vocab_size, int(n)),
+            max_new_tokens=8))
         for n in rng.integers(8, 40, 8)]
 eng.run()
 

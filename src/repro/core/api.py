@@ -30,6 +30,7 @@ to LMBHost being constructed before any consumer in our launchers.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.fabric import (AccessDenied, DeviceClass, DeviceInfo,
@@ -165,9 +166,17 @@ class LMBHost:
             dpid=(self._expander_dpid
                   if device.device_class is DeviceClass.CXL else None))
 
+    def _warn_shim(self, shim: str, repl: str) -> None:
+        warnings.warn(
+            f"LMBHost.{shim} is a deprecated Table-2 paper-name shim; "
+            f"use the class-dispatched LMBHost.{repl} (or the "
+            "repro.core.client.LMBSystem capability API)",
+            DeprecationWarning, stacklevel=3)
+
     def lmb_pcie_alloc(self, device_id: str, nbytes: int,
                        expander_id: Optional[int] = None) -> Allocation:
         """Deprecated Table-2 shim: ``alloc`` restricted to PCIe devices."""
+        self._warn_shim("lmb_pcie_alloc", "alloc")
         if self.fm.device(device_id).device_class is not DeviceClass.PCIE:
             raise LMBError(f"{device_id} is not a PCIe device")
         return self.alloc(device_id, nbytes, expander_id)
@@ -175,6 +184,7 @@ class LMBHost:
     def lmb_cxl_alloc(self, device_id: str, nbytes: int,
                       expander_id: Optional[int] = None) -> Allocation:
         """Deprecated Table-2 shim: ``alloc`` restricted to CXL devices."""
+        self._warn_shim("lmb_cxl_alloc", "alloc")
         if self.fm.device(device_id).device_class is not DeviceClass.CXL:
             raise LMBError(f"{device_id} is not a CXL device")
         return self.alloc(device_id, nbytes, expander_id)
@@ -204,10 +214,12 @@ class LMBHost:
 
     def lmb_pcie_free(self, device_id: str, mmid: int) -> None:
         """Deprecated Table-2 shim for :meth:`free`."""
+        self._warn_shim("lmb_pcie_free", "free")
         self.free(device_id, mmid)
 
     def lmb_cxl_free(self, device_id: str, mmid: int) -> None:
         """Deprecated Table-2 shim for :meth:`free`."""
+        self._warn_shim("lmb_cxl_free", "free")
         self.free(device_id, mmid)
 
     # -- share (device-class-agnostic) ------------------------------------------
@@ -241,11 +253,13 @@ class LMBHost:
     def lmb_pcie_share(self, device_id: str, mmid: int,
                        target_device: str) -> Allocation:
         """Deprecated Table-2 shim for :meth:`share`."""
+        self._warn_shim("lmb_pcie_share", "share")
         return self.share(device_id, mmid, target_device)
 
     def lmb_cxl_share(self, device_id: str, mmid: int,
                       target_device: str) -> Allocation:
         """Deprecated Table-2 shim for :meth:`share`."""
+        self._warn_shim("lmb_cxl_share", "share")
         return self.share(device_id, mmid, target_device)
 
     # -- data-path access check (used by LinkedBuffer + tests) ---------------------

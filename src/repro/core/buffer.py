@@ -217,6 +217,13 @@ class LinkedBuffer:
     def onboard_bytes(self) -> int:
         return self.onboard_pages * self.page_bytes
 
+    def tier_of(self, page: int) -> Optional[str]:
+        """Which tier currently holds a logical page: ``"onboard"``,
+        ``"lmb"``, or ``None`` for a never-materialized page — the
+        public residency query (serving stats report how much admitted
+        KV the LMB pool, not HBM, is carrying)."""
+        return self._pages[page].tier
+
     # --------------------------------------------------------------- allocation
     def append_pages(self, n: int = 1) -> List[int]:
         """Extend the logical buffer by ``n`` zero pages; returns indices."""

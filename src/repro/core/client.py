@@ -635,16 +635,23 @@ def system_for(device_id: str = "dev0", *,
                spid: Optional[int] = None,
                spare: bool = False,
                placement: Union[str, PlacementPolicy] = "least-loaded",
+               tenants: Sequence[Union[TenantSpec, str]] = (),
+               link_bandwidth_Bps: float = DEFAULT_LINK_BW_Bps,
                metrics: Optional[Metrics] = None,
                obs: Optional[ObsSpec] = None) -> LMBSystem:
     """One-device convenience constructor for the overwhelmingly common
-    single-host shape (launchers, benchmarks, tests)."""
+    single-host shape (launchers, benchmarks, tests).  ``tenants``
+    declares the QoS/placement identities sharing the stack (bare names
+    or :class:`TenantSpec`) and ``link_bandwidth_Bps`` sizes the
+    expander links — the two knobs multi-tenant serve sweeps turn."""
     spec = SystemSpec(
         expanders=n_expanders,
         pool_gib=pool_gib,
         hosts=(HostSpec(host_id, page_bytes=page_bytes),),
         devices=(DeviceSpec(device_id, device_class, spid=spid),),
+        tenants=tuple(tenants),
         spare=spare,
         placement=placement,
+        link_bandwidth_Bps=link_bandwidth_Bps,
         obs=obs if obs is not None else ObsSpec())
     return LMBSystem(spec, metrics=metrics)

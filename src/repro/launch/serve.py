@@ -17,7 +17,7 @@ from repro.configs.base import get_config
 from repro.core import DeviceSpec, HostSpec, LMBSystem, SystemSpec
 from repro.models import build_model
 from repro.models.flags import Flags
-from repro.serve import EngineConfig, ServeEngine
+from repro.serve import EngineConfig, ServeEngine, SubmitSpec
 
 
 def main() -> None:
@@ -44,9 +44,10 @@ def main() -> None:
         rng = np.random.default_rng(0)
         t0 = time.monotonic()
         for _ in range(args.requests):
-            eng.submit(rng.integers(0, cfg.vocab_size,
+            eng.submit(SubmitSpec(
+                prompt=rng.integers(0, cfg.vocab_size,
                                     int(rng.integers(4, 48))),
-                       max_new_tokens=args.max_new_tokens)
+                max_new_tokens=args.max_new_tokens))
         eng.run()
         wall = time.monotonic() - t0
         st = eng.stats()

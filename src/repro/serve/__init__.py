@@ -1,4 +1,9 @@
-from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.engine import (EngineConfig, Request, ServeEngine,
+                                SubmitSpec)
 from repro.serve.kv_cache import PagedKVStore
+from repro.serve.loadgen import (SweepReport, TenantLoad, VirtualClock,
+                                 build_trace, run_sweep)
 
-__all__ = ["EngineConfig", "Request", "ServeEngine", "PagedKVStore"]
+__all__ = ["EngineConfig", "Request", "ServeEngine", "SubmitSpec",
+           "PagedKVStore", "TenantLoad", "VirtualClock", "build_trace",
+           "run_sweep", "SweepReport"]

@@ -22,8 +22,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
-from typing import Dict, List, Optional, Union
+from typing import Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +36,35 @@ from repro.models.zoo import Model
 from repro.obs.trace import DEFAULT_RING_CAPACITY, SpanTracer
 from repro.qos.slo import AdmissionController, Decision
 from repro.serve.kv_cache import PagedKVStore
+
+
+@dataclasses.dataclass(frozen=True)
+class SubmitSpec:
+    """Typed submission: everything one request brings to the engine.
+
+    Replaces the growing ``submit(prompt, max_new_tokens=..., ...)``
+    positional/kwarg surface — load generators build these up front
+    (``arrival_time_s`` stamps when the request entered the system, in
+    the engine clock's timebase, so queueing delay counts toward TTFT),
+    and policy code reads ``slo_deadline_s`` instead of re-deriving
+    per-tenant targets."""
+
+    prompt: np.ndarray                 # [S] int32 token ids
+    max_new_tokens: int = 16
+    tenant: str = "default"
+    #: arrival timestamp in the engine clock's timebase; ``None`` means
+    #: "now" (the clock value at submit time).  A trace replay sets it
+    #: so admission/queueing delay is charged to TTFT.
+    arrival_time_s: Optional[float] = None
+    #: per-request SLO deadline (seconds from arrival to completion);
+    #: recorded on the request for policy layers, not enforced here
+    slo_deadline_s: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt",
+                           np.asarray(self.prompt, np.int32))
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
 
 
 @dataclasses.dataclass
@@ -50,6 +80,7 @@ class Request:
     first_token_at: Optional[float] = None
     last_token_at: Optional[float] = None
     done_at: Optional[float] = None
+    slo_deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -70,6 +101,19 @@ class EngineConfig:
     #: initial compute-window estimate for the overlap scheduler; the
     #: engine refines it with measured decode-round times
     kv_compute_window_s: float = 1e-3
+    #: pipeline the step: admission and next-round KV prefetch run at
+    #: the END of each decode round, while the round's compute window
+    #: is still draining the expander links (FabricManager.advance_links
+    #: models the drain).  Tokens are byte-identical to the phased
+    #: (admit -> prefetch -> decode) order; only the modeled exposed
+    #: link wait changes (strictly down — bursts issue into a drained
+    #: link under an open overlap window).
+    pipeline: bool = True
+    #: virtual decode-round duration: when set, the engine drains links
+    #: and sizes the overlap window with this fixed figure instead of
+    #: measured wall time, so a sweep driven by a virtual clock is
+    #: machine-independent and seed-reproducible
+    round_time_s: Optional[float] = None
     #: record spans (serve rounds, TTFT/token events, the KV data path)
     #: into a private tracer attached to the engine's fabric — unless
     #: the fabric already carries an enabled tracer (LMBSystem with
@@ -87,16 +131,22 @@ class ServeEngine:
     def __init__(self, model: Model, params,
                  lmb: Union[LMBSystem, LMBHost],
                  ecfg: EngineConfig, device_id: str = "tpu0",
-                 qos: Optional[AdmissionController] = None):
+                 qos: Optional[AdmissionController] = None,
+                 clock: Optional[Callable[[], float]] = None):
         host = lmb.host() if isinstance(lmb, LMBSystem) else lmb
         self.model = model
         self.params = params
         self.ecfg = ecfg
         self.cfg = model.cfg
         self.qos = qos
+        #: timestamp source for request latency accounting (TTFT/ITL);
+        #: defaults to wall time — a load harness injects a
+        #: VirtualClock so latency figures are machine-independent
+        self.clock: Callable[[], float] = clock or time.monotonic
         self.shed: List[int] = []
         self._tenant_live: Dict[str, int] = {}   # in-flight reqs per tenant
         self.metrics = host.metrics
+        self._fm = host.fm              # link drain + placement queries
         # tracing: reuse an already-enabled fabric tracer (session/global)
         # or, when the config asks, mint one and attach it to the fabric
         # BEFORE the KV store builds its LinkedBuffer, so the whole KV
@@ -131,15 +181,32 @@ class ServeEngine:
         self._decode_fn = jax.jit(model.decode_step)
 
     # -------------------------------------------------------------- intake
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               tenant: str = "default") -> int:
+    def submit(self, spec: Union[SubmitSpec, np.ndarray],
+               max_new_tokens: int = 16, tenant: str = "default") -> int:
+        """Enqueue one request described by a :class:`SubmitSpec`.
+
+        The pre-redesign ``submit(prompt, max_new_tokens=..., tenant=...)``
+        signature still works as a deprecated shim (the positional
+        prompt is wrapped into a spec) so out-of-tree callers keep
+        running; in-repo callers all pass specs."""
+        if not isinstance(spec, SubmitSpec):
+            warnings.warn(
+                "ServeEngine.submit(prompt, ...) is deprecated; pass a "
+                "SubmitSpec (typed submission surface)",
+                DeprecationWarning, stacklevel=2)
+            spec = SubmitSpec(prompt=spec, max_new_tokens=max_new_tokens,
+                              tenant=tenant)
         rid = self._next_req
         self._next_req += 1
-        req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens,
-                      tenant=tenant, submitted_at=time.monotonic())
+        arrived = (self.clock() if spec.arrival_time_s is None
+                   else spec.arrival_time_s)
+        req = Request(rid, spec.prompt, spec.max_new_tokens,
+                      tenant=spec.tenant, submitted_at=arrived,
+                      slo_deadline_s=spec.slo_deadline_s)
         self.requests[rid] = req
         self.waiting.append(req)
-        self._tenant_live[tenant] = self._tenant_live.get(tenant, 0) + 1
+        self._tenant_live[spec.tenant] = (
+            self._tenant_live.get(spec.tenant, 0) + 1)
         return rid
 
     # ----------------------------------------------------------- prefill
@@ -166,7 +233,7 @@ class ServeEngine:
         nxt = int(np.argmax(np.asarray(logits[0])))
         req.out_tokens.append(nxt)
         if req.first_token_at is None:
-            req.first_token_at = time.monotonic()
+            req.first_token_at = self.clock()
             req.last_token_at = req.first_token_at
             ttft = req.first_token_at - req.submitted_at
             self.metrics.observe(f"serve.ttft.{req.tenant}", ttft)
@@ -242,22 +309,75 @@ class ServeEngine:
 
         Decodes per-request (CPU-demo path); the TPU path batches slots
         into one decode_step with the paged-attention kernel.  With
-        ``kv_prefetch`` on, the round's next-decode KV pages are
-        scheduled ahead as bursts, and the measured decode time feeds
-        the overlap scheduler's compute-window estimate.  When tracing
-        is on, the round runs under a ``serve.round`` span whose
-        children carry per-sequence TTFT and inter-token events."""
+        ``kv_prefetch`` on, each round's next-decode KV pages are
+        scheduled ahead as bursts.  ``pipeline=True`` (default) runs
+        admission and that prefetch scheduling at the END of the round,
+        inside the just-measured compute window's link drain; the
+        phased order (admit -> prefetch -> decode, never draining)
+        remains as the reference mode.  Token streams are byte-identical
+        between the two.  When tracing is on, the round runs under a
+        ``serve.round`` span whose children carry per-sequence TTFT and
+        inter-token events."""
+        impl = (self._step_pipelined if self.ecfg.pipeline
+                else self._step_phased)
         tr = self.trace
         if not tr.enabled:
-            return self._step_impl()
+            return impl()
         with tr.span("serve.round", op="serve", active=len(self.active),
-                     waiting=len(self.waiting)):
-            return self._step_impl()
+                     waiting=len(self.waiting),
+                     mode=("pipelined" if self.ecfg.pipeline
+                           else "phased")):
+            return impl()
 
-    def _step_impl(self) -> int:
+    def _step_phased(self) -> int:
+        """Strictly-phased reference order: admit, schedule this round's
+        prefetch, then decode.  Bursts issue at the same modeled instant
+        the decode they feed begins, and links never drain between
+        rounds — the pre-pipeline behavior, kept for A/B runs."""
         self._admit()
         if self.ecfg.kv_prefetch:
             self._schedule_round_prefetch()
+        finished, round_dt = self._decode_round()
+        if self.ecfg.kv_prefetch and self.active:
+            self.kv.note_compute_window(
+                round_dt, observed=self.ecfg.round_time_s is None)
+        return finished
+
+    def _step_pipelined(self) -> int:
+        """Pipelined order: decode first, then run the intake work for
+        the NEXT round — link drain, admission, prefetch scheduling —
+        inside the round's compute window.  Arrivals that landed since
+        the previous round's tail are caught up before decoding so no
+        request waits an extra round versus the phased order."""
+        self._admit()                      # catch-up: post-tail arrivals
+        finished, round_dt = self._decode_round()
+        self._round_tail(round_dt)
+        return finished
+
+    def _round_tail(self, round_dt: float) -> None:
+        """The pipelined step's intake half, run while the decode
+        round's compute window drains the expander links: let modeled
+        time pass on every link (advance_links), open the next overlap
+        window at the measured round time, admit arrivals, and schedule
+        their (plus the surviving actives') next-decode pages as
+        prefetch bursts — which now ride a drained link under a freshly
+        opened window instead of queueing behind the round's demand
+        traffic."""
+        if round_dt > 0.0:
+            self._fm.advance_links(round_dt)
+        if not self.ecfg.kv_prefetch:
+            self._admit()
+            return
+        self.kv.note_compute_window(
+            round_dt, observed=self.ecfg.round_time_s is None)
+        self._admit()
+        self._schedule_round_prefetch()
+
+    def _decode_round(self) -> tuple:
+        """One decode pass over the active slots; returns ``(finished,
+        round_dt)`` where ``round_dt`` is the round's compute-window
+        duration — ``EngineConfig.round_time_s`` when pinned (virtual
+        sweeps), measured wall time otherwise."""
         round_t0 = time.monotonic()
         finished = 0
         for slot, req in list(self.active.items()):
@@ -266,7 +386,7 @@ class ServeEngine:
                                                  tok)
             nxt = int(np.argmax(np.asarray(logits[0])))
             req.out_tokens.append(nxt)
-            now = time.monotonic()
+            now = self.clock()
             if req.last_token_at is not None:
                 gap = now - req.last_token_at
                 self.metrics.observe(f"serve.itl.{req.tenant}", gap)
@@ -282,15 +402,16 @@ class ServeEngine:
                 self.kv.seq(req.seq_id).length += 1
             if len(req.out_tokens) >= req.max_new_tokens:
                 req.state = "done"
-                req.done_at = time.monotonic()
+                req.done_at = self.clock()
                 self.kv.free_seq(req.seq_id)
                 del self.active[slot]
                 self._slot_free.append(slot)
                 finished += 1
                 self._qos_finish(req)
-        if self.ecfg.kv_prefetch and self.active:
-            self.kv.note_compute_window(time.monotonic() - round_t0)
-        return finished
+        if self.ecfg.round_time_s is not None:
+            return finished, (self.ecfg.round_time_s if self.active
+                              or finished else 0.0)
+        return finished, time.monotonic() - round_t0
 
     def _qos_finish(self, req: Request) -> None:
         """Feed the completed request's latency to its tenant's SLO

@@ -181,15 +181,32 @@ class PagedKVStore:
         (remainder deferred, not dropped)."""
         self.buf.schedule_prefetch(pages)
 
-    def note_compute_window(self, seconds: float) -> None:
+    def note_compute_window(self, seconds: float,
+                            observed: bool = True) -> None:
         """Report one decode round's compute time so the overlap
-        scheduler can size the next prefetch window."""
-        self.buf.note_compute_window(seconds)
+        scheduler can size the next prefetch window.  ``observed=False``
+        pins the window exactly instead of folding the sample into the
+        EWMA estimate (virtual-time sweeps with a declared round
+        duration)."""
+        self.buf.note_compute_window(seconds, observed=observed)
 
     def schedule_swap_in(self, sid: int) -> None:
         self.schedule_prefetch(self._seqs[sid].pages)
 
     # ----------------------------------------------------------- accounting
+    def lmb_resident_pages(self) -> int:
+        """KV pages currently parked in the LMB pool tier (not onboard)
+        — the "concurrent sequences backed by LMB-resident KV" figure a
+        load sweep reports alongside its latency table."""
+        return self.buf.stats()["resident"].get("lmb", 0)
+
+    def parked_sequences(self) -> int:
+        """Sequences whose KV is entirely LMB/unmaterialized-resident —
+        admitted work the onboard tier is NOT holding pages for."""
+        return sum(1 for s in self._seqs.values()
+                   if s.pages and not any(self.buf.tier_of(p) == "onboard"
+                                          for p in s.pages))
+
     def stats(self) -> dict:
         st = self.buf.stats()
         st["sequences"] = len(self._seqs)

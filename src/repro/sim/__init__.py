@@ -5,9 +5,9 @@ from repro.sim.engine import (MultiExpanderResult, SharedFabricResult,
                               simulate_shared_fabric)
 from repro.sim.ssd import (GEN4_SSD, GEN5_SSD, Scheme, SSDSpec,
                            make_ssd_model)
-from repro.sim.workload import Workload, make_workload
+from repro.sim.workload import Workload, arrival_times, make_workload
 
 __all__ = ["MultiExpanderResult", "SharedFabricResult", "SimResult",
            "simulate", "simulate_multi_expander", "simulate_shared_fabric",
            "GEN4_SSD", "GEN5_SSD", "Scheme", "SSDSpec", "make_ssd_model",
-           "Workload", "make_workload"]
+           "Workload", "arrival_times", "make_workload"]

@@ -71,3 +71,55 @@ def make_workload(name: str, n_ios: int = 200_000, seed: int = 0,
 
 ALL_PAPER_WORKLOADS: List[str] = ["seqwrite", "randwrite", "seqread",
                                   "randread"]
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes (serving load generation)
+# ---------------------------------------------------------------------------
+#: arrival processes ``arrival_times`` understands
+ARRIVAL_PROCESSES = ("poisson", "bursty")
+
+
+def arrival_times(n: int, rate_rps: float, *, process: str = "poisson",
+                  burst_size: int = 8, burst_factor: float = 10.0,
+                  seed: int = 0, t0: float = 0.0) -> np.ndarray:
+    """``n`` seeded request arrival timestamps at mean rate ``rate_rps``.
+
+    ``"poisson"`` draws i.i.d. exponential inter-arrival gaps (the
+    open-loop serving default).  ``"bursty"`` is an on/off
+    (Markov-modulated) process: geometric bursts of mean ``burst_size``
+    arrivals whose within-burst rate is ``burst_factor`` times the mean
+    rate, separated by compensating idle gaps so the LONG-RUN rate still
+    averages ``rate_rps`` — the same offered load, concentrated into
+    spikes that stress admission and link queues.  Deterministic for a
+    given seed; timestamps are non-decreasing and start at or after
+    ``t0``.
+    """
+    if n < 1:
+        return np.empty(0, np.float64)
+    if rate_rps <= 0:
+        raise ValueError("rate_rps must be > 0")
+    if process not in ARRIVAL_PROCESSES:
+        raise ValueError(f"unknown arrival process {process!r} "
+                         f"(choose from {ARRIVAL_PROCESSES})")
+    rng = np.random.default_rng(seed)
+    mean_gap = 1.0 / rate_rps
+    if process == "poisson":
+        gaps = rng.exponential(mean_gap, n)
+        return t0 + np.cumsum(gaps)
+    if burst_size < 1 or burst_factor <= 1.0:
+        raise ValueError("bursty needs burst_size >= 1, burst_factor > 1")
+    gaps = np.empty(n, np.float64)
+    fast_gap = mean_gap / burst_factor
+    done = 0
+    while done < n:
+        burst = min(int(rng.geometric(1.0 / burst_size)), n - done)
+        gaps[done:done + burst] = rng.exponential(fast_gap, burst)
+        done += burst
+        if done < n:
+            # idle long enough that the burst+idle cycle averages out to
+            # the requested mean rate: burst arrivals "owe" the slow
+            # process (mean_gap - fast_gap) each
+            owed = burst * (mean_gap - fast_gap)
+            gaps[done - 1] += rng.exponential(owed) if owed > 0 else 0.0
+    return t0 + np.cumsum(gaps)

@@ -8,6 +8,8 @@ quota, and a placement-policy swap (least-loaded → tenant-affinity)
 changes block placement without touching FabricManager.
 """
 
+import os
+
 import pytest
 
 from repro.core import (BLOCK_BYTES, DeviceClass, DeviceSpec, ExpanderSpec,
@@ -199,17 +201,59 @@ class TestAgnosticVerbs:
             assert h.bus_addr - PCIE_IOVA_BASE == h.hpa - HPA_WINDOW_BASE
             assert PCIE_IOVA_BASE != HPA_WINDOW_BASE
 
-    def test_deprecated_shims_still_work(self):
-        """The Table-2 names survive as shims over the agnostic verbs."""
+    def test_table2_shims(self):
+        """The Table-2 names survive as shims over the agnostic verbs —
+        every call works, warns DeprecationWarning, and still enforces
+        class membership (the one behavior the generic verbs dropped)."""
         with LMBSystem(two_device_spec()) as system:
             host = system.host()
-            a = host.lmb_pcie_alloc("ssd0", 4096)
-            s = host.lmb_pcie_share("ssd0", a.mmid, "acc0")
+            with pytest.warns(DeprecationWarning, match="lmb_pcie_alloc"):
+                a = host.lmb_pcie_alloc("ssd0", 4096)
+            with pytest.warns(DeprecationWarning, match="lmb_pcie_share"):
+                s = host.lmb_pcie_share("ssd0", a.mmid, "acc0")
             assert s.dpid is not None
-            host.lmb_cxl_free("acc0", a.mmid)
-            host.lmb_pcie_free("ssd0", a.mmid)
-            with pytest.raises(LMBError):
-                host.lmb_cxl_alloc("ssd0", 4096)   # class check preserved
+            with pytest.warns(DeprecationWarning, match="lmb_cxl_free"):
+                host.lmb_cxl_free("acc0", a.mmid)
+            with pytest.warns(DeprecationWarning, match="lmb_pcie_free"):
+                host.lmb_pcie_free("ssd0", a.mmid)
+            # class checks preserved: the shim (and only the shim) rejects
+            # a device of the other class before dispatching
+            with pytest.warns(DeprecationWarning):
+                with pytest.raises(LMBError):
+                    host.lmb_cxl_alloc("ssd0", 4096)
+            with pytest.warns(DeprecationWarning):
+                with pytest.raises(LMBError):
+                    host.lmb_pcie_alloc("acc0", 4096)
+            with pytest.warns(DeprecationWarning, match="lmb_cxl_alloc"):
+                c = host.lmb_cxl_alloc("acc0", 4096)
+            with pytest.warns(DeprecationWarning, match="lmb_cxl_share"):
+                host.lmb_cxl_share("acc0", c.mmid, "ssd0")
+
+    def test_no_in_repo_shim_callers(self):
+        """No code in the repo calls the deprecated Table-2 shims except
+        their definitions and this test file (the deprecation is real:
+        everything in-tree went through the migration)."""
+        import re
+        root = os.path.join(os.path.dirname(__file__), "..")
+        allowed = {
+            os.path.normpath(os.path.join(root, "src/repro/core/api.py")),
+            os.path.normpath(os.path.abspath(__file__)),
+        }
+        pat = re.compile(r"\.lmb_(pcie|cxl)_(alloc|free|share)\(")
+        offenders = []
+        for dirpath, dirnames, filenames in os.walk(os.path.normpath(root)):
+            dirnames[:] = [d for d in dirnames
+                           if d not in (".git", "__pycache__", ".pytest_cache")]
+            for fn in filenames:
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.normpath(os.path.join(dirpath, fn))
+                if path in allowed:
+                    continue
+                with open(path, encoding="utf-8", errors="ignore") as f:
+                    if pat.search(f.read()):
+                        offenders.append(os.path.relpath(path, root))
+        assert not offenders, f"deprecated shim callers: {offenders}"
 
     def test_bind_host_idempotent(self):
         """Satellite: re-binding is a no-op and never resets a quota."""

@@ -46,38 +46,38 @@ class TestExpander:
 class TestAPI:
     def test_alloc_free_roundtrip(self):
         host, fm, _ = make_host()
-        a = host.lmb_pcie_alloc("ssd0", 1 << 20)
+        a = host.alloc("ssd0", 1 << 20)
         assert a.nbytes >= 1 << 20
         assert host.owned_bytes("ssd0") == a.nbytes
-        host.lmb_pcie_free("ssd0", a.mmid)
+        host.free("ssd0", a.mmid)
         assert host.owned_bytes("ssd0") == 0
         # block returned to FM once empty
         assert fm.held_bytes("h0") == 0
 
     def test_wrong_owner_cannot_free(self):
         host, _, _ = make_host()
-        a = host.lmb_pcie_alloc("ssd0", 4096)
+        a = host.alloc("ssd0", 4096)
         with pytest.raises((AccessDenied, LMBError)):
-            host.lmb_pcie_free("gpu0", a.mmid)
+            host.free("gpu0", a.mmid)
 
     def test_share_grants_access(self):
         host, fm, _ = make_host()
-        a = host.lmb_pcie_alloc("ssd0", 8192)
+        a = host.alloc("ssd0", 8192)
         with pytest.raises(AccessDenied):
             host.check_access("gpu0", a.mmid)
-        s = host.lmb_pcie_share("ssd0", a.mmid, "gpu0")
+        s = host.share("ssd0", a.mmid, "gpu0")
         assert s.hpa == a.hpa        # zero-copy: same physical region
         host.check_access("gpu0", a.mmid)
         # CXL share path sets SAT + returns the expander DPID
-        s2 = host.lmb_pcie_share("ssd0", a.mmid, "acc0")
+        s2 = host.share("ssd0", a.mmid, "acc0")
         assert s2.dpid is not None
         host.check_access("acc0", a.mmid)
 
     def test_sharer_free_drops_mapping_only(self):
         host, _, _ = make_host()
-        a = host.lmb_pcie_alloc("ssd0", 4096)
-        host.lmb_pcie_share("ssd0", a.mmid, "gpu0")
-        host.lmb_pcie_free("gpu0", a.mmid)   # sharer drop
+        a = host.alloc("ssd0", 4096)
+        host.share("ssd0", a.mmid, "gpu0")
+        host.free("gpu0", a.mmid)   # sharer drop
         host.check_access("ssd0", a.mmid)    # owner still mapped
         with pytest.raises(AccessDenied):
             host.check_access("gpu0", a.mmid)
@@ -85,41 +85,36 @@ class TestAPI:
     def test_quota(self):
         host, fm, _ = make_host(pool_gib=1)
         fm.set_quota("h0", BLOCK_BYTES)
-        host.lmb_pcie_alloc("ssd0", BLOCK_BYTES // 2)
+        host.alloc("ssd0", BLOCK_BYTES // 2)
         with pytest.raises(OutOfMemory):
-            host.lmb_pcie_alloc("ssd0", BLOCK_BYTES)
+            host.alloc("ssd0", BLOCK_BYTES)
 
     def test_pcie_and_cxl_bus_addressing_differ(self):
         """PCIe devices DMA through a distinct identity-mapped IOVA
         window; CXL devices address the region with its HPA."""
         from repro.core.api import HPA_WINDOW_BASE, PCIE_IOVA_BASE
         host, _, _ = make_host()
-        a = host.lmb_pcie_alloc("ssd0", 4096)
+        a = host.alloc("ssd0", 4096)
         assert a.bus_addr != a.hpa
         assert a.bus_addr - PCIE_IOVA_BASE == a.hpa - HPA_WINDOW_BASE
-        c = host.lmb_cxl_alloc("acc0", 4096)
+        c = host.alloc("acc0", 4096)
         assert c.bus_addr == c.hpa
-
-    def test_cxl_vs_pcie_class_enforced(self):
-        host, _, _ = make_host()
-        with pytest.raises(LMBError):
-            host.lmb_cxl_alloc("ssd0", 4096)
-        with pytest.raises(LMBError):
-            host.lmb_pcie_alloc("acc0", 4096)
+        # the deprecated lmb_pcie_/lmb_cxl_ shims still enforce class
+        # membership — covered in tests/test_client.py::test_table2_shims
 
 
 class TestFailover:
     def test_failure_without_spare_blocks_new_allocs(self):
         host, fm, exp = make_host()
-        host.lmb_pcie_alloc("ssd0", 4096)
+        host.alloc("ssd0", 4096)
         fm.inject_failure()
         assert not fm.healthy
         with pytest.raises(LMBError):
-            host.lmb_pcie_alloc("ssd0", BLOCK_BYTES * 2)
+            host.alloc("ssd0", BLOCK_BYTES * 2)
 
     def test_failover_with_spare_regrants(self):
         host, fm, exp = make_host(spare=True)
-        host.lmb_pcie_alloc("ssd0", 4096)
+        host.alloc("ssd0", 4096)
         held_before = fm.held_bytes("h0")
         fm.inject_failure()
         assert fm.healthy
@@ -130,7 +125,7 @@ class TestFailover:
 
     def test_journal_tracks_lifecycle(self):
         host, fm, _ = make_host()
-        a = host.lmb_pcie_alloc("ssd0", 4096)
-        host.lmb_pcie_free("ssd0", a.mmid)
+        a = host.alloc("ssd0", 4096)
+        host.free("ssd0", a.mmid)
         ops = [e.op for e in fm.journal]
         assert ops.count("grant") == 1 and ops.count("release") == 1

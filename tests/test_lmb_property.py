@@ -41,18 +41,18 @@ def test_allocator_invariants(ops):
     for op, dev, size in ops:
         device = f"dev{dev}"
         if op == "alloc":
-            a = host.lmb_pcie_alloc(device, size)
+            a = host.alloc(device, size)
             assert a.mmid not in live
             live[a.mmid] = (device, a.nbytes)
         elif op == "free" and live:
             mmid = sorted(live)[size % len(live)]
             owner, _ = live.pop(mmid)
-            host.lmb_pcie_free(owner, mmid)
+            host.free(owner, mmid)
         elif op == "share" and live:
             mmid = sorted(live)[size % len(live)]
             owner, _ = live[mmid]
             other = "dev1" if owner == "dev0" else "dev0"
-            s = host.lmb_pcie_share(owner, mmid, other)
+            s = host.share(owner, mmid, other)
             assert s.mmid == mmid
         # invariant: owned bytes match live set exactly
         for d in ("dev0", "dev1"):
@@ -67,7 +67,7 @@ def test_allocator_invariants(ops):
             prev |= pages
     # drain: everything freed -> all blocks returned
     for mmid, (owner, _) in list(live.items()):
-        host.lmb_pcie_free(owner, mmid)
+        host.free(owner, mmid)
     assert host.allocator.block_count == 0
 
 

@@ -1,0 +1,259 @@
+"""Trace-driven serve-sweep harness: arrival processes, typed traces,
+virtual-time replay, and the pipelined step's byte-identity contract."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import system_for
+from repro.core.metrics import Metrics
+from repro.models import build_model
+from repro.models.flags import Flags
+from repro.serve import (EngineConfig, ServeEngine, SubmitSpec, TenantLoad,
+                         VirtualClock, build_trace, run_sweep)
+from repro.sim.workload import arrival_times
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("qwen2-1.5b").reduced()
+    model = build_model(cfg, Flags(remat=False))
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def make_engine(served, clock, **kw):
+    cfg, model, params = served
+    defaults = dict(decode_slots=2, max_seq_len=64, page_tokens=8,
+                    onboard_pages=6, prefill_bucket=16, round_time_s=2e-3)
+    defaults.update(kw)
+    # per-engine Metrics so twin engines never share histograms
+    system = system_for("tpu0", host_id="h0", pool_gib=1,
+                        page_bytes=4096, metrics=Metrics())
+    return ServeEngine(model, params, system, EngineConfig(**defaults),
+                       clock=clock)
+
+
+# prompts sized so two active sequences overflow the 6-page onboard
+# budget (page_tokens=8): the sweep actually exercises LMB spill traffic
+SMALL = [TenantLoad("a", rate_rps=300.0, n_requests=5,
+                    prompt_tokens=(12, 28), max_new_tokens=(4, 8)),
+         TenantLoad("b", rate_rps=300.0, n_requests=5, process="bursty",
+                    burst_size=3, prompt_tokens=(12, 28),
+                    max_new_tokens=(4, 8))]
+
+
+# ------------------------------------------------------ arrival processes
+class TestArrivalTimes:
+    def test_seeded_and_sorted(self):
+        t1 = arrival_times(64, 100.0, seed=3)
+        t2 = arrival_times(64, 100.0, seed=3)
+        assert np.array_equal(t1, t2)
+        assert np.all(np.diff(t1) >= 0)
+        assert not np.array_equal(t1, arrival_times(64, 100.0, seed=4))
+
+    def test_mean_rate_preserved(self):
+        for process in ("poisson", "bursty"):
+            t = arrival_times(4000, 50.0, process=process, seed=0)
+            rate = len(t) / t[-1]
+            assert rate == pytest.approx(50.0, rel=0.15), process
+
+    def test_bursty_is_burstier(self):
+        """Markov-modulated bursts must have a higher gap coefficient of
+        variation than Poisson at the same mean rate."""
+        def cv(t):
+            gaps = np.diff(t)
+            return gaps.std() / gaps.mean()
+        po = arrival_times(2000, 100.0, seed=1)
+        bu = arrival_times(2000, 100.0, process="bursty", seed=1)
+        assert cv(bu) > 1.5 * cv(po)
+
+    def test_unknown_process_rejected(self):
+        with pytest.raises(ValueError):
+            arrival_times(4, 1.0, process="constant")
+
+
+# --------------------------------------------------------- virtual clock
+class TestVirtualClock:
+    def test_advance(self):
+        c = VirtualClock(1.0)
+        assert c() == 1.0
+        c.advance(0.5)
+        assert c.now == 1.5
+        with pytest.raises(ValueError):
+            c.advance(-0.1)
+
+    def test_advance_to_never_rewinds(self):
+        c = VirtualClock()
+        c.advance_to(2.0)
+        c.advance_to(1.0)
+        assert c.now == 2.0
+
+
+# ---------------------------------------------------------------- traces
+class TestBuildTrace:
+    def test_deterministic_and_time_ordered(self):
+        cfg_vocab = 512
+        tr1 = build_trace(SMALL, vocab_size=cfg_vocab, seed=7)
+        tr2 = build_trace(SMALL, vocab_size=cfg_vocab, seed=7)
+        assert len(tr1) == 10
+        times = [s.arrival_time_s for s in tr1]
+        assert times == sorted(times)
+        for a, b in zip(tr1, tr2):
+            assert a.tenant == b.tenant
+            assert a.arrival_time_s == b.arrival_time_s
+            assert a.max_new_tokens == b.max_new_tokens
+            assert np.array_equal(a.prompt, b.prompt)
+
+    def test_tenant_streams_independent(self):
+        """Adding a tenant must not perturb an existing tenant's stream
+        (per-tenant seeding from the trace seed + tenant name)."""
+        solo = build_trace([SMALL[0]], vocab_size=512, seed=7)
+        both = [s for s in build_trace(SMALL, vocab_size=512, seed=7)
+                if s.tenant == "a"]
+        assert len(solo) == len(both)
+        for a, b in zip(solo, both):
+            assert a.arrival_time_s == b.arrival_time_s
+            assert np.array_equal(a.prompt, b.prompt)
+
+
+# ------------------------------------------------------------ SubmitSpec
+class TestSubmitSpec:
+    def test_prompt_coerced_and_validated(self):
+        spec = SubmitSpec(prompt=[1, 2, 3])
+        assert spec.prompt.dtype == np.int32
+        with pytest.raises(ValueError):
+            SubmitSpec(prompt=[1], max_new_tokens=0)
+
+    def test_arrival_time_charged_to_ttft(self, served):
+        """A trace-stamped arrival time becomes submitted_at, so
+        admission queueing counts toward TTFT."""
+        clock = VirtualClock()
+        clock.advance(5.0)
+        eng = make_engine(served, clock)
+        rid = eng.submit(SubmitSpec(prompt=np.arange(1, 9),
+                                    max_new_tokens=2,
+                                    arrival_time_s=4.0))
+        assert eng.requests[rid].submitted_at == 4.0
+        eng.run(50)
+        ttft = (eng.requests[rid].first_token_at
+                - eng.requests[rid].submitted_at)
+        assert ttft >= 1.0          # the queued second is charged
+
+    def test_legacy_submit_deprecated(self, served):
+        eng = make_engine(served, VirtualClock())
+        with pytest.warns(DeprecationWarning, match="SubmitSpec"):
+            rid = eng.submit(np.arange(1, 9), max_new_tokens=2)
+        eng.run(50)
+        assert eng.requests[rid].state == "done"
+
+
+# ------------------------------------------------------------- run_sweep
+class TestRunSweep:
+    def _run(self, served, *, pipeline=True, seed=0):
+        trace = build_trace(SMALL, vocab_size=served[0].vocab_size,
+                            seed=seed)
+        clock = VirtualClock()
+        eng = make_engine(served, clock, pipeline=pipeline)
+        report = run_sweep(eng, trace, clock)
+        return eng, report
+
+    def test_seed_reproducible(self, served):
+        _, r1 = self._run(served)
+        _, r2 = self._run(served)
+        assert r1.per_tenant == r2.per_tenant
+        assert r1.totals == r2.totals
+        assert r1.totals["done"] == 10
+
+    def test_latency_from_engine_histograms(self, served):
+        """Report rows must equal the engine's own histogram snapshot —
+        the harness adds no timing of its own."""
+        eng, report = self._run(served)
+        lat = eng.stats()["latency"]
+        for tenant, row in report.per_tenant.items():
+            assert row["ttft_p99_s"] == lat[f"serve.ttft.{tenant}"]["p99"]
+            assert row["itl_p50_s"] == lat[f"serve.itl.{tenant}"]["p50"]
+        assert "exposed_link_wait_s" in report.totals
+        assert report.table()       # formatter smoke
+
+    def test_needs_round_duration_and_arrivals(self, served):
+        eng = make_engine(served, VirtualClock(), round_time_s=None)
+        trace = build_trace(SMALL[:1], vocab_size=64, seed=0)
+        with pytest.raises(ValueError, match="round duration"):
+            run_sweep(eng, trace, VirtualClock())
+        eng2 = make_engine(served, VirtualClock())
+        with pytest.raises(ValueError, match="arrival_time_s"):
+            run_sweep(eng2, [SubmitSpec(prompt=np.arange(4))],
+                      VirtualClock())
+
+    def test_pipelined_matches_phased_tokens_with_less_wait(self, served):
+        """The tentpole contract: the pipelined step emits byte-identical
+        token streams to the phased reference order while strictly
+        reducing the modeled exposed link wait."""
+        eng_p, _ = self._run(served, pipeline=True)
+        eng_f, _ = self._run(served, pipeline=False)
+        toks_p = {r.req_id: r.out_tokens for r in eng_p.requests.values()}
+        toks_f = {r.req_id: r.out_tokens for r in eng_f.requests.values()}
+        assert toks_p == toks_f
+        assert eng_p.kv.buf.link_wait_s < eng_f.kv.buf.link_wait_s
+
+
+# ------------------------------------- prefetch scheduling corner cases
+class TestNextDecodePages:
+    def test_boundaries(self, served):
+        eng = make_engine(served, VirtualClock())
+        kv = eng.kv
+        sid = kv.new_seq()
+        assert kv.next_decode_pages(sid) == []          # empty sequence
+        pages = kv.buf.append_pages(2)
+        kv.seq(sid).pages.extend(pages)
+        kv.seq(sid).length = kv.page_tokens             # exactly full page
+        assert kv.next_decode_pages(sid) == []          # next opens fresh
+        kv.seq(sid).length = kv.page_tokens + 3         # mid second page
+        assert kv.next_decode_pages(sid) == [pages[1]]  # RMW tail page
+
+    def test_prefetch_identity_under_preemption(self, served):
+        """Preempting mid-decode (KV parks in LMB, swap-in is scheduled
+        as prefetch on resume) must not change any token stream."""
+        def run(pipeline):
+            clock = VirtualClock()
+            eng = make_engine(served, clock, decode_slots=2,
+                              pipeline=pipeline)
+            rng = np.random.default_rng(5)
+            for _ in range(3):
+                eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 18),
+                                      max_new_tokens=6))
+            eng.step()
+            eng.preempt(next(iter(eng.active)))   # forces LMB parking
+            for _ in range(100):
+                if not (eng.waiting or eng.active):
+                    break
+                eng.step()
+                clock.advance(2e-3)
+            return {r.req_id: r.out_tokens for r in eng.requests.values()}
+        assert run(True) == run(False)
+
+    def test_prefetch_identity_under_midstream_admission(self, served):
+        """Requests arriving while decode is in flight (admitted by the
+        pipelined round tail vs the phased round head) must still decode
+        to identical tokens."""
+        def run(pipeline):
+            clock = VirtualClock()
+            eng = make_engine(served, clock, decode_slots=2,
+                              pipeline=pipeline)
+            rng = np.random.default_rng(6)
+            mk = lambda: SubmitSpec(prompt=rng.integers(0, 100, 12),
+                                    max_new_tokens=4)
+            eng.submit(mk())
+            eng.step()
+            eng.submit(mk())            # lands mid-stream
+            eng.step()
+            eng.submit(mk())
+            for _ in range(100):
+                if not (eng.waiting or eng.active):
+                    break
+                eng.step()
+                clock.advance(2e-3)
+            return {r.req_id: r.out_tokens for r in eng.requests.values()}
+        assert run(True) == run(False)

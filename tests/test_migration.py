@@ -42,7 +42,7 @@ def test_pooled_block_ids_never_collide():
     fm, host = make_pooled(n_expanders=3)
     blocks = []
     for eid in range(3):
-        a = host.lmb_pcie_alloc("d0", 4096, expander_id=eid)
+        a = host.alloc("d0", 4096, expander_id=eid)
         assert host.expander_of(a.mmid) == eid
         blocks.append(host.allocator.region(a.mmid).block_id)
     assert len(set(blocks)) == 3
@@ -56,7 +56,7 @@ def test_placement_prefers_least_loaded_link():
     fm, host = make_pooled(n_expanders=2)
     # heat up expander 0's link, then let an unhinted block grant pick
     # (sub-block allocs reuse granted blocks; placement is per block)
-    a0 = host.lmb_pcie_alloc("d0", 4096, expander_id=0)
+    a0 = host.alloc("d0", 4096, expander_id=0)
     for _ in range(50):
         host.meter_transfer("d0", 1 << 20, mmid=a0.mmid)
     grant = fm.request_block("h0")
@@ -174,7 +174,7 @@ def test_last_expander_failure_degrades_and_invalidates():
     buf.check_invariants()
     # dead capacity is not allocatable: raw Table-2 allocs refuse too
     with pytest.raises(Exception):
-        host.lmb_pcie_alloc("d0", 4096)
+        host.alloc("d0", 4096)
 
 
 def test_failover_purges_stale_access_entries():
@@ -274,7 +274,7 @@ def test_failover_replays_bw_shares_onto_standby():
     fm.register_device(DeviceInfo("d1", DeviceClass.PCIE))
     fm.set_bw_share("d0", 3.0, burst_bytes=1 << 20)
     host = LMBHost(fm, "h0", page_bytes=4096)
-    host.lmb_pcie_alloc("d0", 4096)
+    host.alloc("d0", 4096)
     fm.inject_failure()
     assert fm.healthy
     spare = fm.snapshot()["expanders"][1]["link"]["tenants"]

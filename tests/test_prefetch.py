@@ -358,8 +358,10 @@ def make_engine(served, **kw):
 
 
 def run_workload(eng, n_req=6, n_tok=6):
+    from repro.serve import SubmitSpec
     rng = np.random.default_rng(7)
-    rids = [eng.submit(rng.integers(0, 100, 18), max_new_tokens=n_tok)
+    rids = [eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 18),
+                                  max_new_tokens=n_tok))
             for _ in range(n_req)]
     rounds = 0
     while (eng.waiting or eng.active) and rounds < 400:

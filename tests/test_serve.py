@@ -10,7 +10,7 @@ from repro.configs.base import get_config
 from repro.core import system_for
 from repro.models import build_model
 from repro.models.flags import Flags
-from repro.serve import EngineConfig, ServeEngine
+from repro.serve import EngineConfig, ServeEngine, SubmitSpec
 from repro.serve.kv_cache import PagedKVStore
 
 
@@ -41,7 +41,8 @@ def make_engine(served, **kw):
 def test_requests_complete(served):
     eng = make_engine(served)
     rng = np.random.default_rng(0)
-    rids = [eng.submit(rng.integers(0, 100, 12), max_new_tokens=4)
+    rids = [eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 12),
+                               max_new_tokens=4))
             for _ in range(5)]
     eng.run(200)
     assert all(eng.requests[r].state == "done" for r in rids)
@@ -60,7 +61,7 @@ def test_deterministic_outputs_vs_direct_decode(served):
     cfg, model, params = served
     prompt = np.arange(1, 11, dtype=np.int32)
     eng = make_engine(served)
-    rid = eng.submit(prompt, max_new_tokens=4)
+    rid = eng.submit(SubmitSpec(prompt=prompt, max_new_tokens=4))
     eng.run(100)
     got = eng.requests[rid].out_tokens
 
@@ -80,7 +81,8 @@ def test_kv_capacity_exceeds_onboard(served):
     LMB tier and requests still complete (paper's capacity thesis)."""
     eng = make_engine(served, decode_slots=4, onboard_pages=4)
     rng = np.random.default_rng(1)
-    rids = [eng.submit(rng.integers(0, 100, 20), max_new_tokens=6)
+    rids = [eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 20),
+                               max_new_tokens=6))
             for _ in range(6)]
     eng.run(400)
     assert all(eng.requests[r].state == "done" for r in rids)
@@ -91,8 +93,10 @@ def test_kv_capacity_exceeds_onboard(served):
 def test_preemption_and_resume(served):
     eng = make_engine(served, decode_slots=2)
     rng = np.random.default_rng(2)
-    r1 = eng.submit(rng.integers(0, 100, 10), max_new_tokens=8)
-    r2 = eng.submit(rng.integers(0, 100, 10), max_new_tokens=8)
+    r1 = eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 10),
+                               max_new_tokens=8))
+    r2 = eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 10),
+                               max_new_tokens=8))
     eng.step()
     assert eng.requests[r1].state == "active"
     slot = next(s for s, r in eng.active.items() if r.req_id == r1)
@@ -151,10 +155,10 @@ def test_qos_admission_shed_and_slo_feedback(served):
                   demand_Bps=9.5e9, base_latency_s=0.01)
     eng = make_engine(served, qos=ctrl)
     rng = np.random.default_rng(0)
-    gold = eng.submit(rng.integers(0, 100, 8), max_new_tokens=3,
-                      tenant="gold")
-    abuser = eng.submit(rng.integers(0, 100, 8), max_new_tokens=3,
-                        tenant="abuser")
+    gold = eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 8),
+                                 max_new_tokens=3, tenant="gold"))
+    abuser = eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 8),
+                                   max_new_tokens=3, tenant="abuser"))
     eng.run(100)
     assert eng.requests[gold].state == "done"
     assert eng.requests[abuser].state == "shed"
@@ -175,8 +179,8 @@ def test_per_tenant_latency_attribution(served):
     for i in range(4):
         tenant = f"t{i % 2}"
         rids.setdefault(tenant, []).append(
-            eng.submit(rng.integers(0, 100, 12), max_new_tokens=4,
-                       tenant=tenant))
+            eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 12),
+                                  max_new_tokens=4, tenant=tenant)))
     eng.run(200)
     st = eng.stats()
     for tenant, ids in rids.items():
@@ -207,7 +211,8 @@ def test_tracing_off_by_default(served):
     global tracer and record nothing."""
     eng = make_engine(served)
     rng = np.random.default_rng(0)
-    eng.submit(rng.integers(0, 100, 8), max_new_tokens=2)
+    eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 8),
+                          max_new_tokens=2))
     eng.run(50)
     assert not eng.trace.enabled
     assert len(eng.trace.spans()) == 0

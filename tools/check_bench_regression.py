@@ -1,33 +1,33 @@
-"""Gate the batched-data-path benchmark against a committed baseline.
+"""Gate benchmark output: declarative scenario gates + latency baseline.
 
 Usage:
     python tools/check_bench_regression.py BENCH_ci.json \
-        --baseline BENCH_baseline.json [--rtol 0.25] [--min-ratio 5] \
-        [--min-hidden 0.5]
+        --baseline BENCH_baseline.json [--rtol 0.25]
 
-Three checks — two from ``gather_sweep`` rows, one from the
-``prefetch_sweep`` gate row:
+Two kinds of checks:
 
-  * **latency** — per-page gather latency of every ``batched`` row with
-    batch >= 32, NORMALIZED to the same run's ``scalar`` row (the
-    batched/scalar ratio cancels machine speed, so a baseline committed
-    from one box gates CI runners fairly), must not regress more than
-    ``rtol`` (default +25%) against the baseline's ratio.  Small batches
-    are excluded: their per-page numbers are dominated by fixed dispatch
-    overhead and jitter, not by the coalesced path this gate protects.
-    Rows report min-of-iterations latency, the noise-robust statistic.
-  * **metering** — the ``gather_sweep.meter_reduction.b064`` row's
-    scalar/batched arbiter-call ratio must stay >= ``--min-ratio``
-    (default 5, the acceptance floor; the batched engine ships at >100x).
-    This is machine-independent: call counts are deterministic.
-  * **overlap** — the ``prefetch_sweep.gate.hidden`` row (compute-rich
-    sequential scan with the burst-aware prefetcher) must show prefetch
-    hiding at least ``--min-hidden`` (default 0.5) of the LMB read
-    latency, beating demand-only per-page effective latency by at least
-    1.5x, with random access at parity (ratio <= 1.25 — prefetch must
-    not hurt where it cannot help).  All three figures are modeled
-    virtual-time quantities, so they are machine-independent and need
-    no committed baseline.
+  * **Declarative gates** — every scenario that ran declares its own
+    :class:`benchmarks.run.Gate` rows (``@scenario(..., gate=...)``) and
+    ``--json`` embeds them in the payload under ``"gates"``.  Each gate
+    names a row, a ``key=value`` field in its ``derived`` column, and a
+    ``[min, max]`` bound; a missing row or an out-of-bounds value fails
+    CI.  Gate bounds are machine-independent (modeled / virtual-time /
+    count figures), so they need no committed baseline — and adding a
+    gated sweep never means hand-wiring a new key into this checker.
+  * **Gather latency vs baseline** — per-page gather latency of every
+    ``gather_sweep`` ``batched`` row with batch >= 32, NORMALIZED to the
+    same run's ``scalar`` row (the batched/scalar ratio cancels machine
+    speed, so a baseline committed from one box gates CI runners
+    fairly), must not regress more than ``rtol`` (default +25%) against
+    the baseline's ratio.  Small batches are excluded: their per-page
+    numbers are dominated by fixed dispatch overhead and jitter, not by
+    the coalesced path this gate protects.  This check stays here (not
+    in a Gate row) because it is baseline-RELATIVE, not an absolute
+    bound.
+
+For payloads written before the gates list existed, the legacy
+hand-wired checks (meter-reduction floor, prefetch-overlap gate) run as
+a fallback.
 
 Exit code 1 on any violation (CI fails the bench-smoke job).
 """
@@ -46,9 +46,12 @@ GATED = re.compile(r"^gather_sweep\.(lmb)\.b(\d+)\.batched$")
 MIN_GATED_BATCH = 32
 
 
-def load_rows(path: str) -> dict:
+def load_payload(path: str) -> dict:
     with open(path) as f:
-        payload = json.load(f)
+        return json.load(f)
+
+
+def row_index(payload: dict) -> dict:
     return {r["name"]: r for r in payload["rows"]}
 
 
@@ -66,34 +69,43 @@ def derived_field(row: dict, key: str) -> float:
     return float(m.group(1))
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="fresh BENCH json (benchmarks.run --json)")
-    ap.add_argument("--baseline", default="BENCH_baseline.json")
-    ap.add_argument("--rtol", type=float, default=0.25,
-                    help="allowed per-page latency regression (0.25 = +25%%)")
-    ap.add_argument("--min-ratio", type=float, default=5.0,
-                    help="required scalar/batched meter-call ratio @ b064")
-    ap.add_argument("--min-hidden", type=float, default=0.5,
-                    help="required prefetch hidden-fraction in the "
-                         "compute-rich sequential configuration")
-    args = ap.parse_args()
+def check_declared_gates(payload: dict, rows: dict, failures: list) -> None:
+    """Enforce the scenario-declared gates embedded in the payload."""
+    for gate in payload.get("gates", []):
+        name, field = gate["row"], gate["field"]
+        lo, hi = gate.get("min"), gate.get("max")
+        row = rows.get(name)
+        if row is None:
+            print(f"  [FAIL] {name}: gated row missing from output")
+            failures.append(f"gated row {name!r} missing")
+            continue
+        val = derived_field(row, field)
+        ok = ((lo is None or val >= lo) and (hi is None or val <= hi))
+        bound = "".join([f" >= {lo}" if lo is not None else "",
+                         f" <= {hi}" if hi is not None else ""])
+        verdict = "ok" if ok else "FAIL"
+        print(f"  [{verdict:4s}] {name}: {field} = {val}"
+              f" (required{bound})")
+        if not ok:
+            note = gate.get("note", "")
+            failures.append(f"{name}: {field} = {val} violates{bound}"
+                            + (f" — {note}" if note else ""))
 
-    base = load_rows(args.baseline)
-    cur = load_rows(args.current)
-    failures = []
 
-    for name, row in sorted(cur.items()):
+def check_gather_latency(args, base_rows: dict, cur_rows: dict,
+                         failures: list) -> None:
+    """Baseline-relative batched/scalar gather-latency regression."""
+    for name, row in sorted(cur_rows.items()):
         m = GATED.match(name)
         if not m or int(m.group(2)) < MIN_GATED_BATCH:
             continue
-        ref = base.get(name)
+        ref = base_rows.get(name)
         if ref is None:
             print(f"  [new ] {name}: no baseline row, skipping")
             continue
         scalar_name = name[:-len("batched")] + "scalar"
-        got = normalized(row, cur.get(scalar_name))
-        want = normalized(ref, base.get(scalar_name))
+        got = normalized(row, cur_rows.get(scalar_name))
+        want = normalized(ref, base_rows.get(scalar_name))
         limit = want * (1.0 + args.rtol)
         verdict = "FAIL" if got > limit else "ok"
         print(f"  [{verdict:4s}] {name}: batched/scalar {got:.3f} "
@@ -102,7 +114,10 @@ def main() -> int:
         if got > limit:
             failures.append(f"{name}: ratio {got:.3f} > {limit:.3f}")
 
-    red = cur.get("gather_sweep.meter_reduction.b064")
+
+def check_legacy_gates(args, cur_rows: dict, failures: list) -> None:
+    """Hand-wired checks for payloads predating the gates list."""
+    red = cur_rows.get("gather_sweep.meter_reduction.b064")
     if red is None:
         failures.append("missing gather_sweep.meter_reduction.b064 row")
     else:
@@ -114,7 +129,7 @@ def main() -> int:
             failures.append(
                 f"meter-call reduction {ratio:.1f}x < {args.min_ratio}x")
 
-    pf = cur.get("prefetch_sweep.gate.hidden")
+    pf = cur_rows.get("prefetch_sweep.gate.hidden")
     if pf is None:
         failures.append("missing prefetch_sweep.gate.hidden row")
     else:
@@ -137,6 +152,32 @@ def main() -> int:
         if rand_ratio > 1.25:
             failures.append(
                 f"random-access parity broken: {rand_ratio:.3f} > 1.25")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh BENCH json (benchmarks.run --json)")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--rtol", type=float, default=0.25,
+                    help="allowed per-page latency regression (0.25 = +25%%)")
+    ap.add_argument("--min-ratio", type=float, default=5.0,
+                    help="legacy fallback: required scalar/batched "
+                         "meter-call ratio @ b064")
+    ap.add_argument("--min-hidden", type=float, default=0.5,
+                    help="legacy fallback: required prefetch "
+                         "hidden-fraction, compute-rich sequential")
+    args = ap.parse_args()
+
+    base = load_payload(args.baseline)
+    cur = load_payload(args.current)
+    base_rows, cur_rows = row_index(base), row_index(cur)
+    failures: list = []
+
+    check_gather_latency(args, base_rows, cur_rows, failures)
+    if "gates" in cur:
+        check_declared_gates(cur, cur_rows, failures)
+    else:
+        check_legacy_gates(args, cur_rows, failures)
 
     if failures:
         print("\nBENCH REGRESSION:", *failures, sep="\n  - ")
