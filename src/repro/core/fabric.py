@@ -24,8 +24,11 @@ from __future__ import annotations
 import dataclasses
 import enum
 import threading
-from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple,
-                    Union)
+from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Sequence,
+                    Set, Tuple, Union)
+
+if TYPE_CHECKING:  # rack sits above core in the layering; annotation only
+    from repro.rack.topology import PathCost, RackTopology
 
 from repro.core.placement import (ExpanderView, PlacementPolicy,
                                   PlacementRequest, make_placement_policy)
@@ -147,12 +150,21 @@ class FabricManager:
     its own CXL link, arbitrated by its own :class:`LinkArbiter`; block
     grants record which expander backs them so the data path charges the
     right link and hot-page migration can rebalance placement.
+
+    ``topology`` (optional) places the pool behind a switched rack fabric
+    (:class:`repro.rack.topology.RackTopology`): every pooled expander must
+    be attached in it, each expander's arbiter is sized to ITS port
+    bandwidth, placement policies see per-host path latencies and failure
+    domains, and :meth:`inject_domain_failure` can take out a whole
+    switch/power domain at once.  Without one, behaviour is exactly the
+    pre-topology direct-attach model.
     """
 
     def __init__(self, expander: Union[Expander, Sequence[Expander]],
                  spare: Optional[Expander] = None,
                  link_bandwidth_Bps: float = DEFAULT_LINK_BW_Bps,
-                 placement: Union[str, PlacementPolicy, None] = None):
+                 placement: Union[str, PlacementPolicy, None] = None,
+                 topology: Optional["RackTopology"] = None):
         self._lock = threading.RLock()
         #: block→expander placement policy (repro.core.placement);
         #: injected via SystemSpec, defaults to least-loaded
@@ -164,11 +176,18 @@ class FabricManager:
         ids = [e.expander_id for e in exps]
         if len(set(ids)) != len(ids):
             raise ValueError(f"duplicate expander ids: {ids}")
+        self.topology = topology
+        if topology is not None:
+            known = set(topology.expander_ids)
+            missing = [i for i in ids if i not in known]
+            if missing:
+                raise ValueError(
+                    f"expanders {missing} not attached in topology")
         self._link_bandwidth_Bps = float(link_bandwidth_Bps)
         self._expanders: Dict[int, Expander] = {
             e.expander_id: e for e in exps}
         self._arbiters: Dict[int, LinkArbiter] = {
-            eid: LinkArbiter(link_bandwidth_Bps) for eid in self._expanders}
+            eid: LinkArbiter(self._port_bw(eid)) for eid in self._expanders}
         self._spare = spare
         if spare is not None and spare.expander_id in self._expanders:
             # standby joins the pool on promotion; give it a free id now
@@ -194,6 +213,41 @@ class FabricManager:
         self.tracer: SpanTracer = GLOBAL_TRACER
 
     # -- expander set --------------------------------------------------------
+    def _port_bw(self, expander_id: int) -> float:
+        """An expander's link bandwidth: its topology port when racked,
+        else the uniform fabric default (also spares promoted from
+        outside the topology)."""
+        if self.topology is not None:
+            try:
+                return self.topology.port_bandwidth_Bps(expander_id)
+            except Exception:
+                pass
+        return self._link_bandwidth_Bps
+
+    def path_cost(self, host_id: str, expander_id: int) -> "PathCost":
+        """Fabric cost of ``host_id`` reaching ``expander_id``.  Without
+        a topology (or for hosts/expanders outside it) this is the
+        direct-attach degenerate cost: 1 hop, zero latency, the
+        expander's link bandwidth."""
+        from repro.rack.topology import PathCost, TopologyError
+        if self.topology is not None:
+            try:
+                return self.topology.path(host_id, expander_id)
+            except TopologyError:
+                pass
+        return PathCost(hops=1, latency_s=0.0,
+                        bandwidth_Bps=self._port_bw(expander_id))
+
+    def domain_of(self, expander_id: int) -> Optional[str]:
+        """The expander's correlated failure domain, None when no
+        topology is configured (direct attach has no shared domains)."""
+        if self.topology is None:
+            return None
+        try:
+            return self.topology.domain_of(expander_id)
+        except Exception:
+            return None
+
     @property
     def expander_ids(self) -> List[int]:
         return list(self._expanders)
@@ -220,14 +274,23 @@ class FabricManager:
 
     def _views(self, media: MediaKind,
                exclude: Sequence[int] = (),
-               require_room: bool = True) -> List[ExpanderView]:
+               require_room: bool = True,
+               host_id: Optional[str] = None) -> List[ExpanderView]:
         """Candidate expanders as the placement policy sees them: healthy,
         not excluded, and (unless ``require_room`` is off) with at least
-        one free block of ``media``."""
+        one free block of ``media``.  With a topology, each view carries
+        the requesting host's path latency (0.0 for hosts outside the
+        topology) and the expander's failure domain, which is what makes
+        the pool-aware policy prefer near capacity."""
         return [ExpanderView(
                     expander_id=e.expander_id,
                     free_bytes=e.free_bytes(media),
-                    utilization=self._arbiters[e.expander_id].utilization())
+                    utilization=self._arbiters[e.expander_id].utilization(),
+                    path_latency_s=(
+                        self.path_cost(host_id, e.expander_id).latency_s
+                        if host_id is not None and self.topology is not None
+                        else 0.0),
+                    domain=self.domain_of(e.expander_id))
                 for e in self._healthy_expanders()
                 if e.expander_id not in exclude
                 and (not require_room
@@ -258,7 +321,7 @@ class FabricManager:
             raise LMBError("no healthy expander in the pool")
         eid = self._placement.choose(
             self._request_for(media, host_id, device_id),
-            self._views(media))
+            self._views(media, host_id=host_id))
         exp = self._expanders.get(eid) if eid is not None else None
         if exp is None or exp.failed:
             return healthy[0]               # let grant_block raise OOM
@@ -412,9 +475,11 @@ class FabricManager:
         if tr.enabled:
             # dur is the MODELED link delay (virtual seconds), so span
             # sums over a trace equal the fabric's wait counters
+            dom = self.domain_of(eid)
+            extra = {"domain": dom} if dom is not None else {}
             tr.add("link.xfer", tr.now(), grant.delay_s, op=op,
                    tenant=info.tenant, expander=eid, nbytes=nbytes,
-                   device=device_id)
+                   device=device_id, **extra)
         return grant
 
     def op_bytes(self) -> Dict[str, int]:
@@ -532,7 +597,7 @@ class FabricManager:
         spare = self._spare
         self._spare = None
         self._expanders[spare.expander_id] = spare
-        arb = LinkArbiter(self._link_bandwidth_Bps)
+        arb = LinkArbiter(self._port_bw(spare.expander_id))
         self._arbiters[spare.expander_id] = arb
         self.journal.append(JournalEntry(
             "promote", "*", detail=f"expander={spare.expander_id}"))
@@ -543,6 +608,59 @@ class FabricManager:
                 "bw_share", info.device_id,
                 detail=f"{info.bw_weight} (failover replay)"))
         return spare
+
+    def _fail_locked(self, eids: Sequence[int],
+                     domain: Optional[str] = None) -> None:
+        """Fail every expander in ``eids``, then run ONE re-grant pass.
+
+        Marking them ALL dead before re-granting is what makes
+        correlated (domain-wide) failures correct: a per-expander loop
+        would re-grant the first casualty's blocks onto siblings that
+        are about to die with the same switch/power domain, losing them
+        twice.  Caller holds the lock and notifies listeners after."""
+        doomed = set()
+        for eid in eids:
+            exp = self._expanders.get(eid)
+            if exp is None:
+                raise InvalidHandle(f"unknown expander {eid}")
+            doomed.add(eid)
+        for eid in doomed:
+            self._expanders[eid].failed = True
+            detail = f"expander={eid}" + (
+                f" domain={domain}" if domain is not None else "")
+            self.journal.append(JournalEntry("fail", "*", detail=detail))
+        if self._spare is not None:
+            self._promote_spare()
+        if not self._healthy_expanders():
+            # nowhere to re-grant — consumers still hear about the
+            # failure (listener callbacks) and enter degraded mode
+            return
+        for host_id, grants in self._granted.items():
+            regrants = []
+            for g in grants:
+                if self._block_home.get(g.block_id) not in doomed:
+                    regrants.append(g)    # homed elsewhere: untouched
+                    continue
+                # the old block id ceases to exist either way: stale
+                # SAT/IOMMU authorizations for it must not outlive it
+                self.sat.purge_block(g.block_id)
+                self.iommu.purge_block(g.block_id)
+                try:
+                    texp = self._pick_expander(g.media)
+                    ng = texp.grant_block(host_id, g.media)
+                except (OutOfMemory, LMBError):
+                    self._block_home.pop(g.block_id, None)
+                    self.journal.append(
+                        JournalEntry("lost", host_id, g.block_id))
+                    continue
+                self._block_home.pop(g.block_id, None)
+                self._block_home[ng.block_id] = texp.expander_id
+                regrants.append(ng)
+                self.journal.append(
+                    JournalEntry("regrant", host_id, ng.block_id,
+                                 detail=f"was {g.block_id} now "
+                                        f"expander={texp.expander_id}"))
+            self._granted[host_id] = regrants
 
     def inject_failure(self, expander_id: Optional[int] = None) -> None:
         """One expander dies.  With somewhere to go (a passive spare, or
@@ -560,48 +678,30 @@ class FabricManager:
                 healthy = self._healthy_expanders()
                 eid = (healthy[0].expander_id if healthy
                        else next(iter(self._expanders)))
-            exp = self._expanders.get(eid)
-            if exp is None:
-                raise InvalidHandle(f"unknown expander {eid}")
-            exp.failed = True
-            self.journal.append(
-                JournalEntry("fail", "*", detail=f"expander={eid}"))
-            if self._spare is not None:
-                self._promote_spare()
-            if not self._healthy_expanders():
-                # nowhere to re-grant — but consumers must still hear
-                # about the failure to enter degraded mode
-                for cb in self._failover_listeners:
-                    cb(eid)
-                return
-            for host_id, grants in self._granted.items():
-                regrants = []
-                for g in grants:
-                    if self._block_home.get(g.block_id) != eid:
-                        regrants.append(g)    # homed elsewhere: untouched
-                        continue
-                    # the old block id ceases to exist either way: stale
-                    # SAT/IOMMU authorizations for it must not outlive it
-                    self.sat.purge_block(g.block_id)
-                    self.iommu.purge_block(g.block_id)
-                    try:
-                        texp = self._pick_expander(g.media)
-                        ng = texp.grant_block(host_id, g.media)
-                    except (OutOfMemory, LMBError):
-                        self._block_home.pop(g.block_id, None)
-                        self.journal.append(
-                            JournalEntry("lost", host_id, g.block_id))
-                        continue
-                    self._block_home.pop(g.block_id, None)
-                    self._block_home[ng.block_id] = texp.expander_id
-                    regrants.append(ng)
-                    self.journal.append(
-                        JournalEntry("regrant", host_id, ng.block_id,
-                                     detail=f"was {g.block_id} now "
-                                            f"expander={texp.expander_id}"))
-                self._granted[host_id] = regrants
+            self._fail_locked([eid])
         for cb in self._failover_listeners:
             cb(eid)
+
+    def inject_domain_failure(self, domain: str) -> List[int]:
+        """Correlated failure: a switch/power domain dies, taking every
+        pooled expander behind it at once (paper: "a single failure in
+        the memory expander can render all devices unavailable" — a rack
+        makes that plural).  Requires a topology; returns the failed
+        expander ids.  Re-grants land only on expanders OUTSIDE the dead
+        domain (plus a promoted spare, if any)."""
+        if self.topology is None:
+            raise LMBError("no topology: failure domains undefined")
+        eids = [e for e in self.topology.expanders_in_domain(domain)
+                if e in self._expanders]
+        if not eids:
+            raise InvalidHandle(
+                f"no pooled expander in failure domain {domain!r}")
+        with self._lock:
+            self._fail_locked(eids, domain=domain)
+        for cb in self._failover_listeners:
+            for eid in eids:
+                cb(eid)
+        return eids
 
     @property
     def healthy(self) -> bool:
@@ -668,12 +768,15 @@ class FabricManager:
                 "placement_policy": self._placement.name,
                 "link": self.arbiter.snapshot(),
                 "placement": self.placement(),
+                "topology": (self.topology.snapshot()
+                             if self.topology is not None else None),
                 "expanders": {
                     eid: {
                         "failed": e.failed,
                         "free_bytes": e.free_bytes(),
                         "utilization": self._arbiters[eid].utilization(),
                         "link": self._arbiters[eid].snapshot(),
+                        "domain": self.domain_of(eid),
                     }
                     for eid, e in self._expanders.items()
                 },
@@ -696,13 +799,18 @@ def make_multi_fabric(n_expanders: int = 2,
                       pool_gib: int = 64,
                       link_bandwidth_Bps: float = DEFAULT_LINK_BW_Bps,
                       spare: bool = False,
+                      topology: Optional["RackTopology"] = None,
+                      placement: Union[str, PlacementPolicy, None] = None,
                       ) -> Tuple[FabricManager, List[Expander]]:
     """Pooled fabric: ``n_expanders`` DRAM expanders of ``pool_gib`` each,
-    one FM arbitrating each expander's link independently."""
+    one FM arbitrating each expander's link independently.  ``topology``
+    racks the pool behind a switched fabric (expander ids 0..n-1 must be
+    attached in it)."""
     exps = [Expander([(MediaKind.DRAM, pool_gib * 2**30)], expander_id=i)
             for i in range(n_expanders)]
     sp = (Expander([(MediaKind.DRAM, pool_gib * 2**30)],
                    expander_id=n_expanders) if spare else None)
     fm = FabricManager(exps, spare=sp,
-                       link_bandwidth_Bps=link_bandwidth_Bps)
+                       link_bandwidth_Bps=link_bandwidth_Bps,
+                       placement=placement, topology=topology)
     return fm, exps

@@ -49,6 +49,11 @@ class ExpanderView:
     free_bytes: int
     #: the expander link's EWMA utilization in [0, 1]
     utilization: float
+    #: fabric path latency from the requesting host (rack topology hop
+    #: cost); 0.0 = direct attach or no topology configured
+    path_latency_s: float = 0.0
+    #: correlated failure domain (rack topology); None when unknown
+    domain: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,11 +161,45 @@ class TenantAffinityPolicy:
         return self._fallback.choose(request, views)
 
 
+class PoolAwarePolicy:
+    """Topology-aware placement for switched racks: the NEAREST cool
+    expander wins.
+
+    Among candidates whose link utilization is below ``hot_threshold``,
+    the lowest fabric path latency wins (same-leaf beats cross-leaf
+    beats cross-spine), with coolest link then most free bytes breaking
+    ties.  When every candidate runs hot, distance stops mattering and
+    the policy degrades to pure least-loaded — a saturated near link is
+    worse than an idle far one.  Without a topology every
+    ``path_latency_s`` is 0.0 and this behaves exactly like
+    least-loaded."""
+
+    name = "pool-aware"
+
+    def __init__(self, hot_threshold: float = 0.7):
+        if not 0.0 < hot_threshold <= 1.0:
+            raise ValueError(f"hot_threshold {hot_threshold} not in (0, 1]")
+        self.hot_threshold = hot_threshold
+        self._fallback = LeastLoadedPolicy()
+
+    def choose(self, request: PlacementRequest,
+               views: Sequence[ExpanderView]) -> Optional[int]:
+        if not views:
+            return None
+        cool = [v for v in views if v.utilization < self.hot_threshold]
+        if not cool:
+            return self._fallback.choose(request, views)
+        best = min(cool, key=lambda v: (v.path_latency_s, v.utilization,
+                                        -v.free_bytes, v.expander_id))
+        return best.expander_id
+
+
 #: registry for SystemSpec's string-named policies
 _POLICIES = {
     LeastLoadedPolicy.name: LeastLoadedPolicy,
     HeatAwarePolicy.name: HeatAwarePolicy,
     TenantAffinityPolicy.name: TenantAffinityPolicy,
+    PoolAwarePolicy.name: PoolAwarePolicy,
 }
 
 

@@ -56,6 +56,21 @@ class TierSpec:
                 + nbytes / self.bandwidth_Bps)
 
 
+def tier_over_path(tier: TierSpec, path) -> TierSpec:
+    """``tier`` as seen across a rack fabric path: the path's hop latency
+    adds to every access and its bottleneck bandwidth caps streaming.
+
+    ``path`` is duck-typed (``latency_s`` + ``bandwidth_Bps``, i.e. a
+    :class:`repro.rack.topology.PathCost` — tiers sits below rack in the
+    layering, so no import).  A zero-latency path whose bandwidth matches
+    the tier returns an equal spec: direct attach is the degenerate case.
+    """
+    return dataclasses.replace(
+        tier,
+        added_latency_s=tier.added_latency_s + path.latency_s,
+        bandwidth_Bps=min(tier.bandwidth_Bps, path.bandwidth_Bps))
+
+
 # ---------------------------------------------------------------------------
 # Shared-link congestion (repro.qos)
 # ---------------------------------------------------------------------------

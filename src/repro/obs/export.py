@@ -11,7 +11,10 @@ layout:
     with a tenant lands here.  A span carrying both tags is emitted on
     *both* tracks (same ``id`` in args), which is what makes the
     per-link and per-tenant views each complete in Perfetto.
-  * pid ``0`` ("engine") — spans with neither tag (serve rounds,
+  * pid ``3`` ("failure domains") — one tid per rack failure domain;
+    every span whose args carry a ``domain`` tag (rack-topology-aware
+    link transfers) also lands here, giving the blast-radius view.
+  * pid ``0`` ("engine") — spans with none of the tags (serve rounds,
     migration rounds, ...).
 
 Every event's ``args`` carries the full structured span (op class,
@@ -31,6 +34,7 @@ from repro.obs.trace import Span
 _PID_ENGINE = 0
 _PID_LINKS = 1
 _PID_TENANTS = 2
+_PID_DOMAINS = 3
 
 
 def _span_args(s: Span) -> Dict[str, Any]:
@@ -50,6 +54,7 @@ def chrome_trace_events(spans: Iterable[Span]) -> List[Dict[str, Any]]:
     """Spans -> list of Chrome trace-event dicts (with track metadata)."""
     events: List[Dict[str, Any]] = []
     tenants: Dict[str, int] = {}
+    domains: Dict[str, int] = {}
     expanders: set = set()
 
     def emit(s: Span, pid: int, tid: int) -> None:
@@ -69,6 +74,11 @@ def chrome_trace_events(spans: Iterable[Span]) -> List[Dict[str, Any]]:
             tid = tenants.setdefault(s.tenant, len(tenants))
             emit(s, _PID_TENANTS, tid)
             placed = True
+        dom = s.args.get("domain")
+        if dom is not None:
+            tid = domains.setdefault(str(dom), len(domains))
+            emit(s, _PID_DOMAINS, tid)
+            placed = True
         if not placed:
             emit(s, _PID_ENGINE, 0)
 
@@ -79,6 +89,8 @@ def chrome_trace_events(spans: Iterable[Span]) -> List[Dict[str, Any]]:
          "args": {"name": "fabric links"}},
         {"name": "process_name", "ph": "M", "pid": _PID_TENANTS, "tid": 0,
          "args": {"name": "tenants"}},
+        {"name": "process_name", "ph": "M", "pid": _PID_DOMAINS, "tid": 0,
+         "args": {"name": "failure domains"}},
     ]
     for eid in sorted(expanders):
         meta.append({"name": "thread_name", "ph": "M", "pid": _PID_LINKS,
@@ -88,6 +100,10 @@ def chrome_trace_events(spans: Iterable[Span]) -> List[Dict[str, Any]]:
         meta.append({"name": "thread_name", "ph": "M",
                      "pid": _PID_TENANTS, "tid": tid,
                      "args": {"name": f"tenant {tenant}"}})
+    for dom, tid in sorted(domains.items(), key=lambda kv: kv[1]):
+        meta.append({"name": "thread_name", "ph": "M",
+                     "pid": _PID_DOMAINS, "tid": tid,
+                     "args": {"name": f"domain {dom}"}})
     return meta + events
 
 

@@ -173,16 +173,29 @@ def plan_rebalance(demands_Bps: Sequence[float],
                    placement: Sequence[int],
                    n_expanders: int,
                    link_bandwidth_Bps: float,
-                   saturation_threshold: float = 0.7) -> List[int]:
+                   saturation_threshold: float = 0.7,
+                   alive: Optional[Sequence[int]] = None) -> List[int]:
     """Greedy device→expander rebalance (the simulator's migration model).
 
     Repeatedly moves the heaviest device off the most-loaded expander onto
     the least-loaded one, while the hottest link's offered load exceeds
     ``saturation_threshold`` and the move strictly lowers it.  Deterministic
     and conservative: never increases the maximum link load.
+
+    ``alive`` restricts targets to the surviving expanders after a
+    (correlated) failure: every device homed on a dead expander is FORCED
+    off it first — least-loaded survivor, heaviest device first, no
+    improvement test, because staying is not an option — and the greedy
+    rebalance then runs over the survivors only.  Default: all alive.
     """
     if len(demands_Bps) != len(placement):
         raise ValueError("demands and placement length mismatch")
+    live = sorted(set(range(n_expanders) if alive is None
+                      else (int(e) for e in alive)))
+    if not live:
+        raise ValueError("no surviving expander to rebalance onto")
+    if any(not 0 <= e < n_expanders for e in live):
+        raise ValueError(f"alive references unknown expander: {live}")
     place = list(placement)
     loads = [0.0] * n_expanders
     for dev, eid in enumerate(place):
@@ -191,11 +204,21 @@ def plan_rebalance(demands_Bps: Sequence[float],
     def rho(eid: int) -> float:
         return loads[eid] / link_bandwidth_Bps
 
+    live_set = set(live)
+    evacuees = sorted((dev for dev, eid in enumerate(place)
+                       if eid not in live_set),
+                      key=lambda dev: demands_Bps[dev], reverse=True)
+    for dev in evacuees:
+        dst = min(live, key=rho)
+        loads[place[dev]] -= demands_Bps[dev]
+        place[dev] = dst
+        loads[dst] += demands_Bps[dev]
+
     while True:
-        src = max(range(n_expanders), key=rho)
+        src = max(live, key=rho)
         if rho(src) <= saturation_threshold:
             break
-        dst = min(range(n_expanders), key=rho)
+        dst = min(live, key=rho)
         movers = sorted((dev for dev, eid in enumerate(place)
                          if eid == src),
                         key=lambda dev: demands_Bps[dev], reverse=True)

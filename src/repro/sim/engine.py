@@ -14,6 +14,15 @@ limiters, the DES reduces to tracking each stage's next-free time while still
 processing every IO individually (so we get exact per-IO latencies and can
 mix hit/miss populations from the locality model).
 
+As of the rack-scale PR the default execution engine is the VECTORIZED
+struct-of-arrays core (``repro.rack.des.simulate_lanes``): the same
+recurrence, evaluated as chunked max-plus prefix scans over numpy
+arrays, with many devices advancing in lockstep lanes.  ``simulate``,
+``simulate_shared_fabric`` and ``simulate_multi_expander`` are all
+re-expressed on that core; the original per-IO Python loop survives as
+``engine="scalar"`` — the reference implementation regression tests and
+the rack_sweep speedup gate compare against.
+
 Multi-device mode (``simulate_shared_fabric``): N devices hammer ONE
 expander through a shared link — the scalability question the paper's Fig 6
 never answers.  The link is arbitrated by weighted max-min fairness
@@ -43,7 +52,22 @@ from repro.obs.trace import GLOBAL_TRACER
 from repro.qos.arbiter import jain_fairness, weighted_max_min
 from repro.qos.migration import plan_rebalance
 from repro.sim.ssd import Scheme, SSDSpec
-from repro.sim.workload import Workload
+from repro.sim.workload import Workload, locality_hits
+
+
+def recovery_fraction(hot_before_us: float, hot_after_us: float,
+                      baseline_us: float) -> float:
+    """1.0 = the contended p99 fully recovered to the uncontended
+    baseline; 0.0 = the intervention didn't help.  Guarded against the
+    zero/negative-denominator case: when the contended and baseline p99
+    coincide (nothing was lost) the answer is full recovery, not a
+    divide-by-zero.  Shared by :class:`MultiExpanderResult` and the
+    rack-scale failover metrics (repro.rack.scenarios)."""
+    gap = hot_before_us - baseline_us
+    if gap <= 0:
+        return 1.0
+    rec = (hot_before_us - hot_after_us) / gap
+    return float(min(max(rec, 0.0), 1.0))
 
 
 @dataclasses.dataclass
@@ -65,11 +89,35 @@ class SimResult:
                 f"{self.mean_lat_us:.2f},{self.p99_lat_us:.2f}")
 
 
+def _lane_to_result(spec: SSDSpec, scheme: Scheme, workload: Workload,
+                    lanes, i: int, device: Optional[str] = None) -> SimResult:
+    """One lane of a ``repro.rack.des.LaneResult`` as a SimResult."""
+    iops = float(lanes.iops[i])
+    result = SimResult(
+        scheme=scheme.name, workload=workload.name,
+        device=device or spec.name,
+        n_ios=lanes.n_ios, wall_s=float(lanes.wall_s[i]), iops=iops,
+        bandwidth_MBps=iops * workload.io_bytes / 1e6,
+        mean_lat_us=float(lanes.mean_lat_s[i] * 1e6),
+        p99_lat_us=float(lanes.p99_lat_s[i] * 1e6),
+        index_hit_ratio=float(lanes.index_hit_ratio[i]),
+    )
+    tr = GLOBAL_TRACER
+    if tr.enabled:
+        tr.add("sim.run", tr.now(), result.wall_s, op="sim",
+               nbytes=result.n_ios * workload.io_bytes, scheme=scheme.name,
+               workload=workload.name, device=result.device,
+               iops=round(iops), p99_us=round(result.p99_lat_us, 2))
+    return result
+
+
 def simulate(spec: SSDSpec, scheme: Scheme, workload: Workload,
              seed: Optional[int] = None, *,
              data_rate_cap_iops: Optional[float] = None,
              link_utilization: float = 0.0,
-             prefetch_depth: int = 0) -> SimResult:
+             prefetch_depth: int = 0,
+             extra_index_latency_s: float = 0.0,
+             engine: str = "vector") -> SimResult:
     """Closed-loop DES of one device.
 
     ``data_rate_cap_iops`` throttles the data stage below the device's
@@ -83,8 +131,29 @@ def simulate(spec: SSDSpec, scheme: Scheme, workload: Workload,
     hideable behind compute, but the index engine's service rate is
     not, and random/zipf patterns (no predictable next index) get no
     hiding at all: the demand-only parity case.
+    ``extra_index_latency_s`` adds a fabric path cost (a
+    :class:`repro.rack.topology.PathCost` latency) to every external
+    index access — 0.0 is the direct-attach degenerate case.
+
+    ``engine`` selects the execution core: ``"vector"`` (default) runs
+    the lockstep struct-of-arrays core (``repro.rack.des``); ``"scalar"``
+    is the original per-IO Python loop, kept as the reference the
+    regression tests and the rack_sweep speedup gate compare against.
+    Both produce the same seeded results to floating-point tolerance.
     """
-    rng = np.random.default_rng(workload.seed if seed is None else seed)
+    if engine not in ("vector", "scalar"):
+        raise ValueError(f"unknown engine {engine!r} "
+                         "(choose 'vector' or 'scalar')")
+    lane_seed = workload.seed if seed is None else seed
+    if engine == "vector":
+        from repro.rack.des import simulate_lanes
+        lanes = simulate_lanes(
+            spec, scheme, workload, seeds=[lane_seed],
+            data_rate_cap_iops=data_rate_cap_iops,
+            link_utilization=link_utilization,
+            extra_index_latency_s=extra_index_latency_s,
+            prefetch_depth=prefetch_depth)
+        return _lane_to_result(spec, scheme, workload, lanes, 0)
     n = workload.n_ios
     qd = workload.queue_depth
     pattern, op = workload.pattern, workload.op
@@ -113,8 +182,9 @@ def simulate(spec: SSDSpec, scheme: Scheme, workload: Workload,
             # throughput cost of sharing is already the arbiter's grant cap
             # (data_rate_cap_iops), so inflating the engine's sustained
             # rate as well would double-count the link.
-            index_rate = engine.rate(scheme.t_tier_s)
-            index_lat = congested_latency(scheme.t_tier_s, link_utilization)
+            t_eff = scheme.t_tier_s + extra_index_latency_s
+            index_rate = engine.rate(t_eff)
+            index_lat = congested_latency(t_eff, link_utilization)
             if prefetch_depth > 0 and pattern == "seq":
                 # lookahead window = the data-stage service time of the
                 # depth preceding IOs; only the latency the window can't
@@ -126,8 +196,8 @@ def simulate(spec: SSDSpec, scheme: Scheme, workload: Workload,
         index_rate, index_lat = float("inf"), 0.0
 
     hit_ratio = scheme.onboard_hit_ratio
-    hits = (rng.random(n) < hit_ratio) if needs_index and hit_ratio > 0 \
-        else np.zeros(n, dtype=bool) if needs_index else np.ones(n, dtype=bool)
+    hits = locality_hits(n, hit_ratio, lane_seed) if needs_index \
+        else np.ones(n, dtype=bool)
 
     # ---- closed-loop DES ---------------------------------------------------
     # worker completion heap holds the times the qd slots free up
@@ -210,6 +280,7 @@ def simulate_shared_fabric(spec: SSDSpec, scheme: Scheme, workload: Workload,
                            link_bandwidth_Bps: float = 30e9,
                            weights: Optional[Sequence[float]] = None,
                            prefetch_depth: int = 0,
+                           engine: str = "vector",
                            ) -> SharedFabricResult:
     """Fig-6 pipeline × N devices hammering ONE expander.
 
@@ -229,7 +300,8 @@ def simulate_shared_fabric(spec: SSDSpec, scheme: Scheme, workload: Workload,
         raise ValueError(f"{len(weights)} weights for {n_devices} devices")
 
     # one device's unconstrained throughput = its sustained link demand
-    base = simulate(spec, scheme, workload, prefetch_depth=prefetch_depth)
+    base = simulate(spec, scheme, workload, prefetch_depth=prefetch_depth,
+                    engine=engine)
     demand_Bps = base.iops * workload.io_bytes
 
     names = [f"dev{i}" for i in range(n_devices)]
@@ -240,12 +312,28 @@ def simulate_shared_fabric(spec: SSDSpec, scheme: Scheme, workload: Workload,
     offered = min(n_devices * demand_Bps / link_bandwidth_Bps, 1.0)
 
     per_device: List[SimResult] = []
-    for i, nm in enumerate(names):
-        r = simulate(spec, scheme, workload, seed=workload.seed + i,
-                     data_rate_cap_iops=grants[nm] / workload.io_bytes,
-                     link_utilization=offered,
-                     prefetch_depth=prefetch_depth)
-        per_device.append(dataclasses.replace(r, device=f"{r.device}#{i}"))
+    if engine == "vector":
+        # all devices advance as lockstep lanes of one vectorized run
+        from repro.rack.des import simulate_lanes
+        lanes = simulate_lanes(
+            spec, scheme, workload,
+            seeds=[workload.seed + i for i in range(n_devices)],
+            data_rate_cap_iops=[grants[nm] / workload.io_bytes
+                                for nm in names],
+            link_utilization=offered,
+            prefetch_depth=prefetch_depth)
+        for i in range(n_devices):
+            per_device.append(_lane_to_result(
+                spec, scheme, workload, lanes, i,
+                device=f"{spec.name}#{i}"))
+    else:
+        for i, nm in enumerate(names):
+            r = simulate(spec, scheme, workload, seed=workload.seed + i,
+                         data_rate_cap_iops=grants[nm] / workload.io_bytes,
+                         link_utilization=offered,
+                         prefetch_depth=prefetch_depth, engine=engine)
+            per_device.append(
+                dataclasses.replace(r, device=f"{r.device}#{i}"))
 
     goodputs = [r.iops * workload.io_bytes for r in per_device]
     return SharedFabricResult(
@@ -297,11 +385,9 @@ class MultiExpanderResult:
     def recovery_fraction(self) -> float:
         """1.0 = hot-expander p99 fully recovered to the uncontended
         baseline; 0.0 = migration didn't help."""
-        gap = self.hot_p99_before_us - self.baseline_p99_us
-        if gap <= 0:
-            return 1.0
-        rec = (self.hot_p99_before_us - self.hot_p99_after_us) / gap
-        return float(min(max(rec, 0.0), 1.0))
+        return recovery_fraction(self.hot_p99_before_us,
+                                 self.hot_p99_after_us,
+                                 self.baseline_p99_us)
 
     def row(self) -> str:
         return (f"{self.n_devices},{self.n_expanders},"
@@ -317,6 +403,7 @@ def simulate_multi_expander(spec: SSDSpec, scheme: Scheme,
                             placement: Optional[Sequence[int]] = None,
                             resident_bytes_per_device: int = 64 * 2**20,
                             saturation_threshold: float = 0.7,
+                            engine: str = "vector",
                             ) -> MultiExpanderResult:
     """Pooled fabric: ``n_devices`` spread over ``n_expanders`` links.
 
@@ -335,15 +422,18 @@ def simulate_multi_expander(spec: SSDSpec, scheme: Scheme,
     if any(not 0 <= p < n_expanders for p in placement):
         raise ValueError("placement references unknown expander")
 
-    base = simulate(spec, scheme, workload)
+    base = simulate(spec, scheme, workload, engine=engine)
     demand_Bps = base.iops * workload.io_bytes
 
     def phase(place: Sequence[int]) -> tuple:
+        # per-expander arbitration first (pure bookkeeping), then ONE
+        # vectorized run with per-lane caps/utilizations for the whole pool
         by_exp: Dict[int, List[int]] = {}
         for dev, eid in enumerate(place):
             by_exp.setdefault(eid, []).append(dev)
         rhos = [0.0] * n_expanders
-        results: List[Optional[SimResult]] = [None] * n_devices
+        caps = np.empty(n_devices)
+        utils = np.empty(n_devices)
         for eid in range(n_expanders):
             devs = by_exp.get(eid, [])
             if not devs:
@@ -354,12 +444,27 @@ def simulate_multi_expander(spec: SSDSpec, scheme: Scheme,
                 {f"dev{d}": demand_Bps for d in devs},
                 {f"dev{d}": 1.0 for d in devs}, link_bandwidth_Bps)
             for d in devs:
+                caps[d] = grants[f"dev{d}"] / workload.io_bytes
+                utils[d] = rho
+        results: List[Optional[SimResult]] = [None] * n_devices
+        if engine == "vector":
+            from repro.rack.des import simulate_lanes
+            lanes = simulate_lanes(
+                spec, scheme, workload,
+                seeds=[workload.seed + d for d in range(n_devices)],
+                data_rate_cap_iops=caps, link_utilization=utils)
+            for d in range(n_devices):
+                results[d] = _lane_to_result(
+                    spec, scheme, workload, lanes, d,
+                    device=f"{spec.name}#{d}@x{place[d]}")
+        else:
+            for d in range(n_devices):
                 r = simulate(
                     spec, scheme, workload, seed=workload.seed + d,
-                    data_rate_cap_iops=grants[f"dev{d}"] / workload.io_bytes,
-                    link_utilization=rho)
+                    data_rate_cap_iops=float(caps[d]),
+                    link_utilization=float(utils[d]), engine=engine)
                 results[d] = dataclasses.replace(
-                    r, device=f"{r.device}#{d}@x{eid}")
+                    r, device=f"{r.device}#{d}@x{place[d]}")
         return results, rhos
 
     before, rhos_before = phase(placement)

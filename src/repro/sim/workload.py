@@ -9,7 +9,7 @@ onboard cache).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List
+from typing import Iterator, List, Sequence
 
 import numpy as np
 
@@ -74,6 +74,34 @@ ALL_PAPER_WORKLOADS: List[str] = ["seqwrite", "randwrite", "seqread",
 
 
 # ---------------------------------------------------------------------------
+# Locality (index hit/miss) streams
+# ---------------------------------------------------------------------------
+
+def locality_hits(n: int, hit_ratio: float, seed: int) -> np.ndarray:
+    """The onboard-index hit stream the DES consumes: ``n`` seeded
+    Bernoulli(``hit_ratio``) draws.  ``hit_ratio == 0`` returns the
+    all-miss stream WITHOUT touching the RNG (the seed engine's exact
+    behaviour, kept so seeded runs stay bit-identical).  Single source
+    of truth for both the scalar per-IO engine and the vectorized
+    batch path — determinism across the two is tested."""
+    if hit_ratio > 0:
+        return np.random.default_rng(seed).random(n) < hit_ratio
+    return np.zeros(n, dtype=bool)
+
+
+def batch_locality_hits(n: int, hit_ratio: float,
+                        seeds: Sequence[int]) -> np.ndarray:
+    """Vectorized batch generation: one ``(len(seeds), n)`` hit matrix,
+    row ``i`` identical to ``locality_hits(n, hit_ratio, seeds[i])`` —
+    each lane keeps its own seeded stream so a vectorized rack run
+    reproduces the scalar per-device runs lane-for-lane."""
+    if hit_ratio > 0:
+        return np.stack([np.random.default_rng(s).random(n) < hit_ratio
+                         for s in seeds])
+    return np.zeros((len(seeds), n), dtype=bool)
+
+
+# ---------------------------------------------------------------------------
 # Arrival processes (serving load generation)
 # ---------------------------------------------------------------------------
 #: arrival processes ``arrival_times`` understands
@@ -123,3 +151,14 @@ def arrival_times(n: int, rate_rps: float, *, process: str = "poisson",
             owed = burst * (mean_gap - fast_gap)
             gaps[done - 1] += rng.exponential(owed) if owed > 0 else 0.0
     return t0 + np.cumsum(gaps)
+
+
+def batch_arrival_times(n: int, rate_rps: float, seeds: Sequence[int],
+                        **kw) -> np.ndarray:
+    """Batched arrival generation: ``(len(seeds), n)`` timestamp matrix,
+    row ``i`` identical to ``arrival_times(n, rate_rps, seed=seeds[i],
+    **kw)``.  Per-lane seeded streams, so the vectorized rack DES and
+    any scalar replay of one lane see the same arrivals."""
+    kw.pop("seed", None)
+    return np.stack([arrival_times(n, rate_rps, seed=int(s), **kw)
+                     for s in seeds])

@@ -1,0 +1,494 @@
+"""Rack-scale pool tests: topology paths and failure domains, the
+vectorized event core's scalar-regression contract, FM topology wiring
+(correlated domain failure), the ``alive=`` failover planner, the
+pool-aware placement policy, and the rack observability plumbing."""
+
+import numpy as np
+import pytest
+
+from repro.core.placement import (ExpanderView, PlacementRequest,
+                                  PoolAwarePolicy)
+from repro.core.tiers import TierKind, TierSpec, tier_over_path
+from repro.qos.migration import plan_rebalance
+from repro.rack.des import simulate_lanes
+from repro.rack.topology import PathCost, RackTopology, TopologyError
+from repro.sim import (make_ssd_model, make_workload, simulate,
+                       simulate_multi_expander, simulate_shared_fabric)
+from repro.sim.engine import recovery_fraction
+from repro.sim.ssd import make_schemes
+from repro.sim.workload import (arrival_times, batch_arrival_times,
+                                batch_locality_hits, locality_hits)
+
+N_IOS = 5_000
+
+
+@pytest.fixture(scope="module")
+def gen5():
+    spec = make_ssd_model(5)
+    return spec, make_schemes(spec)
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+
+class TestTopology:
+    def test_direct_is_one_hop_zero_latency(self):
+        topo = RackTopology.direct((0, 1), ("h0",))
+        p = topo.path("h0", 0)
+        assert p.hops == 1
+        assert p.latency_s == 0.0
+        assert p.bandwidth_Bps > 0
+
+    def test_two_tier_same_vs_cross_leaf(self):
+        topo = RackTopology.two_tier(2, 2, hosts_per_leaf=1)
+        near = topo.path("h0", 0)       # h0 and e0 share leaf 0
+        far = topo.path("h0", 2)        # e2 lives under leaf 1
+        assert near.hops == 1 and far.hops == 3
+        assert far.latency_s > near.latency_s > 0.0
+
+    def test_path_is_symmetric_in_cost_and_cached(self):
+        topo = RackTopology.two_tier(2, 2, hosts_per_leaf=1)
+        assert topo.path("h0", 3) == topo.path("h0", 3)
+
+    def test_failure_domains_follow_leaves(self):
+        topo = RackTopology.two_tier(2, 2, hosts_per_leaf=1)
+        assert topo.domain_of(0) == topo.domain_of(1) == "pd0"
+        assert topo.domain_of(2) == topo.domain_of(3) == "pd1"
+        assert sorted(topo.expanders_in_domain("pd0")) == [0, 1]
+
+    def test_unknown_endpoints_raise(self):
+        topo = RackTopology.two_tier(1, 1)
+        with pytest.raises(TopologyError):
+            topo.path("nope", 0)
+        with pytest.raises(TopologyError):
+            topo.path("h0", 99)
+
+    def test_tier_over_path_folds_latency_and_bottleneck_bw(self):
+        tier = TierSpec(TierKind.LMB_CXL, 190e-9, 30e9)
+        path = PathCost(hops=3, latency_s=140e-9, bandwidth_Bps=16e9)
+        t = tier_over_path(tier, path)
+        assert t.added_latency_s == pytest.approx(330e-9)
+        assert t.bandwidth_Bps == 16e9
+        # direct attach is the degenerate identity (same bw, 0 ns)
+        ident = tier_over_path(tier, PathCost(1, 0.0, 30e9))
+        assert ident == tier
+
+
+# ---------------------------------------------------------------------------
+# vectorized event core vs the scalar reference engine
+# ---------------------------------------------------------------------------
+
+class TestVectorizedCore:
+    @pytest.mark.parametrize("scheme_name",
+                             ["ideal", "dftl", "lmb-cxl", "lmb-pcie"])
+    @pytest.mark.parametrize("wl_name", ["randread", "seqwrite"])
+    def test_simulate_matches_scalar(self, gen5, scheme_name, wl_name):
+        """Same seed -> same p50/p99/iops from both engines."""
+        spec, schemes = gen5
+        wl = make_workload(wl_name, n_ios=N_IOS)
+        v = simulate(spec, schemes[scheme_name], wl)
+        s = simulate(spec, schemes[scheme_name], wl, engine="scalar")
+        assert v.iops == pytest.approx(s.iops, rel=1e-6)
+        assert v.mean_lat_us == pytest.approx(s.mean_lat_us, rel=1e-6)
+        assert v.p99_lat_us == pytest.approx(s.p99_lat_us, rel=1e-6)
+        assert v.index_hit_ratio == s.index_hit_ratio
+
+    def test_simulate_kwargs_match_scalar(self, gen5):
+        spec, schemes = gen5
+        wl = make_workload("randread", n_ios=N_IOS)
+        kw = dict(data_rate_cap_iops=4e5, link_utilization=0.5,
+                  extra_index_latency_s=140e-9)
+        v = simulate(spec, schemes["lmb-cxl"], wl, **kw)
+        s = simulate(spec, schemes["lmb-cxl"], wl, engine="scalar", **kw)
+        assert v.p99_lat_us == pytest.approx(s.p99_lat_us, rel=1e-6)
+        assert v.iops == pytest.approx(s.iops, rel=1e-6)
+
+    def test_unknown_engine_rejected(self, gen5):
+        spec, schemes = gen5
+        wl = make_workload("randread", n_ios=100)
+        with pytest.raises(ValueError, match="engine"):
+            simulate(spec, schemes["ideal"], wl, engine="gpu")
+
+    def test_shared_fabric_matches_scalar(self, gen5):
+        spec, schemes = gen5
+        wl = make_workload("randread", n_ios=N_IOS)
+        v = simulate_shared_fabric(spec, schemes["lmb-cxl"], wl, 6)
+        s = simulate_shared_fabric(spec, schemes["lmb-cxl"], wl, 6,
+                                   engine="scalar")
+        assert v.mean_p99_us == pytest.approx(s.mean_p99_us, rel=1e-6)
+        assert v.aggregate_goodput_Bps == pytest.approx(
+            s.aggregate_goodput_Bps, rel=1e-6)
+        assert v.fairness_jain == pytest.approx(s.fairness_jain, rel=1e-6)
+
+    def test_multi_expander_matches_scalar(self, gen5):
+        spec, schemes = gen5
+        wl = make_workload("randread", n_ios=N_IOS)
+        v = simulate_multi_expander(spec, schemes["lmb-cxl"], wl, 8)
+        s = simulate_multi_expander(spec, schemes["lmb-cxl"], wl, 8,
+                                    engine="scalar")
+        assert v.placement_after == s.placement_after
+        assert v.hot_p99_before_us == pytest.approx(s.hot_p99_before_us,
+                                                    rel=1e-6)
+        assert v.hot_p99_after_us == pytest.approx(s.hot_p99_after_us,
+                                                   rel=1e-6)
+        assert v.recovery_fraction == pytest.approx(s.recovery_fraction,
+                                                    rel=1e-5)
+
+    def test_lanes_match_independent_single_runs(self, gen5):
+        """The SoA engine is N independent lanes, not an approximation:
+        each lane reproduces its own single-device run exactly."""
+        spec, schemes = gen5
+        wl = make_workload("zipfread", n_ios=N_IOS)
+        seeds = [11, 22, 33]
+        lanes = simulate_lanes(spec, schemes["lmb-cxl"], wl, seeds=seeds)
+        for i, seed in enumerate(seeds):
+            solo = simulate(spec, schemes["lmb-cxl"], wl, seed=seed)
+            assert lanes.p99_lat_s[i] * 1e6 == pytest.approx(
+                solo.p99_lat_us, rel=1e-6)
+            assert lanes.iops[i] == pytest.approx(solo.iops, rel=1e-6)
+
+    def test_heterogeneous_per_lane_conditions(self, gen5):
+        """Per-lane caps/utilization/path latencies differ -> each lane
+        still matches its scalar twin (the rack pool case)."""
+        spec, schemes = gen5
+        wl = make_workload("randread", n_ios=2_000)
+        caps = [3e5, 6e5, 1e12]   # the huge cap never binds (uncapped)
+        utils = [0.0, 0.4, 0.8]
+        extras = [0.0, 50e-9, 330e-9]
+        lanes = simulate_lanes(
+            spec, schemes["lmb-cxl"], wl, seeds=[1, 2, 3],
+            data_rate_cap_iops=caps,
+            link_utilization=utils, extra_index_latency_s=extras)
+        for i in range(3):
+            solo = simulate(
+                spec, schemes["lmb-cxl"], wl, seed=i + 1,
+                engine="scalar",
+                data_rate_cap_iops=caps[i],
+                link_utilization=utils[i],
+                extra_index_latency_s=extras[i])
+            assert lanes.p99_lat_s[i] * 1e6 == pytest.approx(
+                solo.p99_lat_us, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# FM topology wiring + correlated domain failure
+# ---------------------------------------------------------------------------
+
+class TestFabricTopology:
+    def _fabric(self, placement=None):
+        from repro.core.fabric import make_multi_fabric
+        topo = RackTopology.two_tier(2, 2, hosts_per_leaf=1)
+        fm, _ = make_multi_fabric(4, pool_gib=4, topology=topo,
+                                  placement=placement)
+        fm.bind_host("h0")
+        return fm, topo
+
+    def test_topology_must_cover_pool(self):
+        from repro.core.fabric import make_multi_fabric
+        with pytest.raises(Exception):
+            # only 2 expanders racked for a 4-expander pool
+            make_multi_fabric(4, topology=RackTopology.two_tier(1, 2))
+
+    def test_path_cost_and_domain_queries(self):
+        fm, topo = self._fabric()
+        assert fm.path_cost("h0", 0).hops == 1
+        assert fm.path_cost("h0", 2).hops == 3
+        assert fm.domain_of(0) == "pd0" and fm.domain_of(3) == "pd1"
+        snap = fm.snapshot()
+        assert snap["topology"] is not None
+        assert {e["domain"]
+                for e in snap["expanders"].values()} == {"pd0", "pd1"}
+
+    def test_path_cost_without_topology_is_direct(self):
+        from repro.core.fabric import make_multi_fabric
+        fm, _ = make_multi_fabric(2)
+        p = fm.path_cost("anyhost", 0)
+        assert p.hops == 1 and p.latency_s == 0.0
+        assert fm.domain_of(0) is None
+
+    def test_domain_failure_regrants_outside_dead_domain(self):
+        fm, topo = self._fabric()
+        grants = [fm.request_block("h0", expander_id=e)
+                  for e in (0, 0, 1, 2, 3)]
+        failed = fm.inject_domain_failure("pd0")
+        assert sorted(failed) == [0, 1]
+        homes = {fm.expander_of(g.block_id) for g in fm.held_grants("h0")}
+        assert homes and homes.isdisjoint({0, 1})
+        by_op = fm.journal_stats()["by_op"]
+        assert by_op.get("regrant", 0) == 3      # blocks on e0/e0/e1
+        assert by_op.get("lost", 0) == 0
+        assert by_op.get("fail", 0) == 2         # both leaf expanders
+        assert len(fm.held_grants("h0")) == 5
+
+    def test_domain_failure_requires_topology(self):
+        from repro.core.fabric import LMBError, make_multi_fabric
+        fm, _ = make_multi_fabric(2)
+        with pytest.raises(LMBError):
+            fm.inject_domain_failure("pd0")
+
+    def test_unknown_domain_rejected(self):
+        fm, _ = self._fabric()
+        with pytest.raises(TopologyError):
+            fm.inject_domain_failure("pd-nope")
+
+    def test_domain_without_pooled_expander_rejected(self):
+        from repro.core.fabric import InvalidHandle, make_multi_fabric
+        # rack the 2-expander pool on leaf 0 of a 2-leaf topology: pd1
+        # exists in the topology but holds no pooled expander
+        topo = RackTopology.two_tier(2, 2, hosts_per_leaf=1)
+        fm, _ = make_multi_fabric(2, pool_gib=1, topology=topo)
+        with pytest.raises(InvalidHandle):
+            fm.inject_domain_failure("pd1")
+
+    def test_domain_failure_notifies_listeners_per_expander(self):
+        fm, _ = self._fabric()
+        fm.request_block("h0", expander_id=0)
+        seen = []
+        fm.on_failover(seen.append)
+        fm.inject_domain_failure("pd0")
+        assert sorted(seen) == [0, 1]
+
+    def test_pool_aware_placement_through_fm(self):
+        """The policy sees real path costs: every grant from h0 lands
+        on h0's own leaf, capacity-balanced across its two expanders."""
+        fm, _ = self._fabric(placement="pool-aware")
+        homes = [fm.expander_of(fm.request_block("h0").block_id)
+                 for _ in range(6)]
+        assert set(homes) == {0, 1}
+        assert homes.count(0) == homes.count(1)
+
+
+# ---------------------------------------------------------------------------
+# failover planning (plan_rebalance alive=)
+# ---------------------------------------------------------------------------
+
+class TestAliveRebalance:
+    def test_forced_evacuation_balances_survivors(self):
+        place = [d % 4 for d in range(16)]
+        out = plan_rebalance([1e9] * 16, place, 4, 30e9, alive=[2, 3])
+        assert all(e in (2, 3) for e in out)
+        assert out.count(2) == out.count(3) == 8
+        # devices already on survivors were not gratuitously moved
+        assert all(out[d] == place[d] for d in range(16)
+                   if place[d] in (2, 3))
+
+    def test_evacuation_is_heaviest_first_to_least_loaded(self):
+        demands = [4e9, 1e9, 1e9]
+        out = plan_rebalance(demands, [0, 1, 2], 3, 30e9, alive=[1, 2])
+        # the 4 GB/s evacuee goes to the emptier survivor at its turn
+        assert out[0] in (1, 2) and out[1] == 1 and out[2] == 2
+
+    def test_no_survivors_raises(self):
+        with pytest.raises(ValueError):
+            plan_rebalance([1e9], [0], 2, 30e9, alive=[])
+
+    def test_unknown_survivor_raises(self):
+        with pytest.raises(ValueError):
+            plan_rebalance([1e9], [0], 2, 30e9, alive=[5])
+
+    def test_alive_none_is_previous_behaviour(self):
+        place = [0, 0, 1]
+        assert plan_rebalance([1e8] * 3, place, 2, 30e9) == place
+
+
+# ---------------------------------------------------------------------------
+# pool-aware placement policy (unit)
+# ---------------------------------------------------------------------------
+
+class TestPoolAwarePolicy:
+    REQ = PlacementRequest()
+
+    def _view(self, eid, util=0.0, lat=0.0, free=2**30):
+        return ExpanderView(eid, free, util, path_latency_s=lat)
+
+    def test_nearest_cool_wins(self):
+        pol = PoolAwarePolicy()
+        views = [self._view(0, lat=190e-9), self._view(1, lat=50e-9),
+                 self._view(2, lat=330e-9)]
+        assert pol.choose(self.REQ, views) == 1
+
+    def test_all_hot_degrades_to_least_loaded(self):
+        pol = PoolAwarePolicy(hot_threshold=0.5)
+        views = [self._view(0, util=0.9, lat=50e-9),
+                 self._view(1, util=0.6, lat=330e-9)]
+        assert pol.choose(self.REQ, views) == 1
+
+    def test_without_topology_matches_least_loaded(self):
+        pol = PoolAwarePolicy()
+        views = [self._view(0, util=0.3), self._view(1, util=0.1)]
+        assert pol.choose(self.REQ, views) == 1
+        assert pol.choose(self.REQ, []) is None
+
+
+# ---------------------------------------------------------------------------
+# satellite: recovery_fraction zero-denominator guard
+# ---------------------------------------------------------------------------
+
+class TestRecoveryFraction:
+    def test_zero_gap_is_full_recovery(self):
+        assert recovery_fraction(50.0, 50.0, 50.0) == 1.0
+
+    def test_negative_gap_is_full_recovery(self):
+        # contended p99 landed BELOW baseline (noise): still 1.0, not
+        # a negative-denominator blowup
+        assert recovery_fraction(40.0, 39.0, 50.0) == 1.0
+
+    def test_clamped_to_unit_interval(self):
+        assert recovery_fraction(100.0, 120.0, 50.0) == 0.0
+        assert recovery_fraction(100.0, 40.0, 50.0) == 1.0
+
+    def test_partial_recovery(self):
+        assert recovery_fraction(100.0, 75.0, 50.0) == pytest.approx(0.5)
+
+    def test_multi_expander_result_uses_guard(self, gen5):
+        spec, schemes = gen5
+        wl = make_workload("randread", n_ios=1_000)
+        # balanced placement: nothing to migrate, gap ~ 0 -> exactly 1.0
+        r = simulate_multi_expander(spec, schemes["lmb-cxl"], wl, 2,
+                                    placement=[0, 1])
+        assert 0.0 <= r.recovery_fraction <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# satellite: workload stream determinism (scalar vs batch)
+# ---------------------------------------------------------------------------
+
+class TestWorkloadDeterminism:
+    def test_locality_hits_scalar_matches_batch_rows(self):
+        seeds = [7, 8, 9]
+        batch = batch_locality_hits(512, 0.6, seeds)
+        for i, s in enumerate(seeds):
+            np.testing.assert_array_equal(batch[i],
+                                          locality_hits(512, 0.6, s))
+
+    def test_locality_hits_same_seed_reproduces(self):
+        a = locality_hits(256, 0.4, 42)
+        np.testing.assert_array_equal(a, locality_hits(256, 0.4, 42))
+        assert not np.array_equal(a, locality_hits(256, 0.4, 43))
+
+    def test_all_miss_identical_regardless_of_seed(self):
+        np.testing.assert_array_equal(locality_hits(64, 0.0, 1),
+                                      locality_hits(64, 0.0, 2))
+        assert not batch_locality_hits(64, 0.0, [1, 2]).any()
+
+    def test_arrival_times_scalar_matches_batch_rows(self):
+        seeds = [3, 4]
+        batch = batch_arrival_times(256, 1e6, seeds)
+        for i, s in enumerate(seeds):
+            np.testing.assert_array_equal(
+                batch[i], arrival_times(256, 1e6, seed=s))
+
+    def test_vector_engine_hit_streams_match_scalar(self, gen5):
+        """End to end: a scheme WITH onboard hits produces the same hit
+        ratio and latencies through both engines (the hit stream is the
+        only stochastic input)."""
+        from repro.sim.ssd import Scheme
+        spec, schemes = gen5
+        base = schemes["lmb-cxl"]
+        s = Scheme(base.name, base.t_tier_s, base.write_through_index,
+                   onboard_hit_ratio=0.35)
+        wl = make_workload("zipfread", n_ios=N_IOS)
+        v = simulate(spec, s, wl)
+        r = simulate(spec, s, wl, engine="scalar")
+        assert v.index_hit_ratio == pytest.approx(r.index_hit_ratio,
+                                                  rel=1e-12)
+        assert v.p99_lat_us == pytest.approx(r.p99_lat_us, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# satellite: benchmark harness fails fast on unknown scenarios
+# ---------------------------------------------------------------------------
+
+class TestBenchmarkCLI:
+    def test_unknown_only_lists_available(self, monkeypatch, capsys):
+        from benchmarks import run as bench
+        monkeypatch.setattr(
+            "sys.argv", ["benchmarks.run", "--only", "rack_sweep,nope"])
+        with pytest.raises(SystemExit) as exc:
+            bench.main()
+        assert exc.value.code == 2
+        err = capsys.readouterr().err
+        assert "unknown scenario(s) ['nope']" in err
+        assert "rack_sweep" in err and "fig6" in err
+
+    def test_rack_sweep_registered_with_gates(self):
+        from benchmarks import run as bench
+        sc = bench.SCENARIOS["rack_sweep"]
+        fields = {(g.row, g.field) for g in sc.gates}
+        assert ("rack_sweep.failover.gate", "recovery") in fields
+        assert ("rack_sweep.speedup.gate", "speedup") in fields
+        assert ("rack_sweep.scale.d16", "requests") in fields
+
+
+# ---------------------------------------------------------------------------
+# rack scenarios (smoke at reduced size) + observability plumbing
+# ---------------------------------------------------------------------------
+
+class TestRackScenarios:
+    def test_hop_cost_monotone(self):
+        from repro.rack.scenarios import hop_cost_sweep
+        rows = hop_cost_sweep(n_ios=2_000)
+        p99s = [r["p99_us"] for r in rows]
+        assert p99s == sorted(p99s)
+        assert rows[0]["case"] == "direct" and rows[0]["path_ns"] == 0.0
+
+    def test_failover_recovery_gate(self):
+        from repro.rack.scenarios import failover_recovery
+        fo = failover_recovery(n_ios=2_000)
+        assert fo["recovery"] >= 0.9
+        assert fo["lost"] == 0 and fo["regranted"] == 8
+        assert sorted(fo["failed_expanders"]) == [0, 1]
+
+    def test_placement_face_off_pool_beats_skew(self):
+        from repro.rack.scenarios import placement_face_off
+        face = placement_face_off(n_ios=2_000)
+        assert face["p99_ratio_skew_over_pool"] > 1.1
+        assert face["near_fraction_pool_aware"] == 1.0
+
+    def test_domain_spans_flow_to_trace_and_summary(self, tmp_path):
+        from repro.obs.export import load_trace, write_chrome_trace
+        from repro.obs.trace import SpanTracer
+        tr = SpanTracer(enabled=True)
+        tr.add("link.xfer", 0.0, 1e-6, op="demand", expander=0,
+               nbytes=4096, domain="pd0")
+        tr.add("link.xfer", 1e-6, 1e-6, op="demand", expander=2,
+               nbytes=8192, domain="pd1")
+        tr.add("link.xfer", 2e-6, 1e-6, op="demand", expander=1,
+               nbytes=1024)                       # domainless: untagged
+        path = str(tmp_path / "t.json")
+        write_chrome_trace(tr.spans(), path)
+        import json
+        doc = json.load(open(path))
+        dom_events = [e for e in doc["traceEvents"]
+                      if e["pid"] == 3 and e.get("ph") == "X"]
+        assert len(dom_events) == 2
+        names = {e["args"]["name"] for e in doc["traceEvents"]
+                 if e["pid"] == 3 and e["name"] == "thread_name"}
+        assert names == {"domain pd0", "domain pd1"}
+        # and the CLI summary reports per-domain bytes from either format
+        import importlib
+        import os
+        import sys
+        tools = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "tools")
+        if tools not in sys.path:
+            sys.path.insert(0, tools)
+        lmbtrace = importlib.import_module("lmbtrace")
+        summ = lmbtrace.summarize(load_trace(path))
+        assert summ["domain_bytes"] == {"pd0": 4096, "pd1": 8192}
+
+    def test_fm_meter_transfer_tags_domain(self):
+        from repro.core.fabric import make_multi_fabric
+        from repro.obs.trace import SpanTracer
+        topo = RackTopology.two_tier(2, 1, hosts_per_leaf=1)
+        tr = SpanTracer(enabled=True)
+        fm, _ = make_multi_fabric(2, pool_gib=1, topology=topo)
+        fm.tracer = tr
+        fm.bind_host("h0")
+        from repro.core.fabric import DeviceClass, DeviceInfo
+        fm.register_device(DeviceInfo("devX", DeviceClass.CXL, spid=1))
+        g = fm.request_block("h0", expander_id=1)
+        fm.meter_transfer("devX", 4096, block_id=g.block_id)
+        xfers = [s for s in tr.spans() if s.name == "link.xfer"]
+        assert xfers and xfers[-1].args.get("domain") == "pd1"

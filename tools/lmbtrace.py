@@ -11,6 +11,9 @@ from the span stream:
   * per-op-class byte totals over ``link.xfer`` spans — these reconcile
     exactly with ``FabricManager.op_bytes()`` because both accrue at the
     same arbiter call,
+  * per-failure-domain link bytes (spans tagged with a rack topology
+    ``domain``) — the blast-radius view: how much traffic rides links
+    that one switch/power-domain failure would take out together,
   * the hidden fraction: prefetch link seconds over total link seconds
     (durations of ``link.xfer`` spans are MODELED virtual delay, so the
     figure is machine-independent),
@@ -52,6 +55,7 @@ def summarize(spans: List[Span]) -> dict:
     names: Dict[str, int] = {}
     op_bytes: Dict[str, int] = {}
     op_secs: Dict[str, float] = {}
+    domain_bytes: Dict[str, int] = {}
     tenant_waits: Dict[str, List[float]] = {}
     for s in spans:
         names[s.name] = names.get(s.name, 0) + 1
@@ -60,6 +64,9 @@ def summarize(spans: List[Span]) -> dict:
         op = s.op or "unknown"
         op_bytes[op] = op_bytes.get(op, 0) + s.nbytes
         op_secs[op] = op_secs.get(op, 0.0) + s.dur
+        dom = s.args.get("domain")
+        if dom is not None:
+            domain_bytes[dom] = domain_bytes.get(dom, 0) + s.nbytes
         if s.tenant is not None:
             tenant_waits.setdefault(s.tenant, []).append(s.dur)
     total_s = sum(op_secs.values())
@@ -77,6 +84,7 @@ def summarize(spans: List[Span]) -> dict:
         "names": dict(sorted(names.items())),
         "op_bytes": dict(sorted(op_bytes.items())),
         "op_secs": dict(sorted(op_secs.items())),
+        "domain_bytes": dict(sorted(domain_bytes.items())),
         "hidden_fraction": hidden,
         "tenants": tenants,
     }
@@ -94,6 +102,10 @@ def print_summary(summary: dict, label: Optional[str] = None) -> None:
             secs = summary["op_secs"][op]
             print(f"  {op:<10s} {_fmt_bytes(nb):>12s}  "
                   f"{secs * 1e3:8.3f} ms modeled")
+    if summary.get("domain_bytes"):
+        print("link bytes by failure domain (rack topology):")
+        for dom, nb in summary["domain_bytes"].items():
+            print(f"  {dom:<10s} {_fmt_bytes(nb):>12s}")
     if summary["hidden_fraction"] is not None:
         print(f"hidden fraction (prefetch link-s / total link-s): "
               f"{summary['hidden_fraction']:.3f}")
@@ -120,6 +132,12 @@ def print_diff(old: dict, new: dict) -> None:
     for op in sorted(set(old["op_bytes"]) | set(new["op_bytes"])):
         o, n = old["op_bytes"].get(op, 0), new["op_bytes"].get(op, 0)
         print(f"{'bytes.' + op:<32s} {_fmt_bytes(o):>14s} "
+              f"{_fmt_bytes(n):>14s} {_delta(o, n):>8s}")
+    for dom in sorted(set(old.get("domain_bytes", {}))
+                      | set(new.get("domain_bytes", {}))):
+        o = old.get("domain_bytes", {}).get(dom, 0)
+        n = new.get("domain_bytes", {}).get(dom, 0)
+        print(f"{'bytes.domain.' + dom:<32s} {_fmt_bytes(o):>14s} "
               f"{_fmt_bytes(n):>14s} {_delta(o, n):>8s}")
     for op in sorted(set(old["op_secs"]) | set(new["op_secs"])):
         o = old["op_secs"].get(op, 0.0)
