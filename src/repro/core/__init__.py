@@ -24,6 +24,8 @@ from repro.core.client import (DeviceSpec, ExpanderSpec, HostSpec,
 from repro.core.fabric import (AccessDenied, DeviceClass, DeviceInfo,
                                FabricManager, make_default_fabric,
                                make_multi_fabric)
+from repro.core.faults import (FaultEvent, FaultInjector, FaultPlan,
+                               RetryPolicy)
 from repro.core.offload import TierExecutor, supports_in_jit_offload
 from repro.core.overlap import (OverlapScheduler, exposed_latency_s,
                                 hidden_fraction)
@@ -55,4 +57,6 @@ __all__ = [
     "PlacementPolicy", "PlacementRequest", "ExpanderView",
     "LeastLoadedPolicy", "HeatAwarePolicy", "TenantAffinityPolicy",
     "make_placement_policy",
+    # chaos / fault injection
+    "FaultEvent", "FaultPlan", "FaultInjector", "RetryPolicy",
 ]

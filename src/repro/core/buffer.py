@@ -139,7 +139,9 @@ class LinkedBuffer:
         self.prefetch_deferred = 0
         self.prefetch_hidden_s = 0.0
         self.degraded = False
+        self._closed = False
         host.fm.on_failover(self._on_failover)
+        host.fm.on_repair(self._on_repair)
         # QoS link metering: every byte crossing to/from the LMB tier is
         # charged to this device's share of the expander link.  If the
         # caller's executor carries a meter hook AND actually fires it
@@ -1277,7 +1279,9 @@ class LinkedBuffer:
         the FM.  Called by LMBSystem.close() so a session cannot leak
         quota through its buffers."""
         self.degraded = True
+        self._closed = True
         self.host.fm.off_failover(self._on_failover)
+        self.host.fm.off_repair(self._on_repair)
         for chunk, handle in enumerate(self._lmb_allocs):
             if handle is None:
                 continue
@@ -1336,6 +1340,24 @@ class LinkedBuffer:
             self.name, "failover: LMB pages on expander "
                        f"{'*' if expander_id is None else expander_id} "
                        "invalidated")
+
+    def _on_repair(self, expander_id: int) -> None:
+        """A failed expander was readmitted (blank).  If the pool is
+        healthy again, exit degraded mode: paging may grow fresh LMB
+        chunks — with fresh capabilities and fresh SAT/IOMMU mappings —
+        on the repaired capacity.  Nothing is restored retroactively:
+        pages invalidated at failure stay 'never written', and chunk
+        handles freed (or orphaned) while degraded stay stale.  A
+        CLOSED buffer never leaves degraded mode — close() means the
+        footprint was released for good."""
+        if self._closed:
+            return
+        if self.degraded and self.host.fm.healthy:
+            self.degraded = False
+            self.metrics.event(
+                self.name,
+                f"repair: expander {expander_id} readmitted; LMB tier "
+                "available again")
 
     # --------------------------------------------------------------- validation
     def _check(self, page: int) -> None:

@@ -57,6 +57,7 @@ from repro.obs.trace import (DEFAULT_RING_CAPACITY, GLOBAL_TRACER, Span,
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.buffer import LinkedBuffer
+    from repro.core.faults import FaultInjector, FaultPlan, RetryPolicy
 
 
 class StaleHandle(LMBError):
@@ -557,6 +558,28 @@ class LMBSystem:
         """Kill one expander (failure drill); handles homed on it go
         stale via the generation bump."""
         self.fm.inject_failure(expander_id)
+
+    def readmit_expander(self, expander_id: int) -> None:
+        """Repair drill: a failed expander rejoins the pool blank (see
+        FabricManager.readmit_expander).  Pre-failure handles stay
+        stale; buffers exit degraded mode."""
+        self.fm.readmit_expander(expander_id)
+
+    def attach_fault_injector(self, plan: "FaultPlan", *,
+                              retry: Optional["RetryPolicy"] = None,
+                              seed: int = 0) -> "FaultInjector":
+        """Attach the chaos layer (repro.core.faults) to this session's
+        fabric: the plan's timed faults fire as the fabric's link clock
+        advances, and every metered transfer pays the active fault
+        state's modeled cost.  Returns the injector (counters /
+        snapshot live on it)."""
+        from repro.core.faults import FaultInjector, RetryPolicy
+        injector = FaultInjector(plan,
+                                 retry=retry if retry is not None
+                                 else RetryPolicy(),
+                                 seed=seed)
+        self.fm.attach_fault_injector(injector)
+        return injector
 
     # ---------------------------------------------------------- introspection
     @property

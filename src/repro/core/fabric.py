@@ -28,6 +28,7 @@ from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Sequence,
                     Set, Tuple, Union)
 
 if TYPE_CHECKING:  # rack sits above core in the layering; annotation only
+    from repro.core.faults import FaultInjector
     from repro.rack.topology import PathCost, RackTopology
 
 from repro.core.placement import (ExpanderView, PlacementPolicy,
@@ -201,6 +202,10 @@ class FabricManager:
         self.iommu = IOMMUTable()
         self.journal: List[JournalEntry] = []
         self._failover_listeners: List[Callable[[int], None]] = []
+        self._repair_listeners: List[Callable[[int], None]] = []
+        #: chaos layer (repro.core.faults), attached via
+        #: attach_fault_injector; None = no fault perturbation at all
+        self.fault_injector: Optional["FaultInjector"] = None
         #: bytes metered per traffic class ("demand" | "prefetch" | ...):
         #: lets consumers prove prefetch traffic is tagged and bounded
         self._op_bytes: Dict[str, int] = {}
@@ -281,11 +286,19 @@ class FabricManager:
         one free block of ``media``.  With a topology, each view carries
         the requesting host's path latency (0.0 for hosts outside the
         topology) and the expander's failure domain, which is what makes
-        the pool-aware policy prefer near capacity."""
+        the pool-aware policy prefer near capacity.  With a fault
+        injector attached, browned-out/retraining expanders report a
+        saturated link so placement (and migration targets, which
+        delegate here) avoid them for the window."""
+        inj = self.fault_injector
         return [ExpanderView(
                     expander_id=e.expander_id,
                     free_bytes=e.free_bytes(media),
-                    utilization=self._arbiters[e.expander_id].utilization(),
+                    utilization=(
+                        self._arbiters[e.expander_id].utilization()
+                        if inj is None else inj.degrade_view(
+                            e.expander_id,
+                            self._arbiters[e.expander_id].utilization())),
                     path_latency_s=(
                         self.path_cost(host_id, e.expander_id).latency_s
                         if host_id is not None and self.topology is not None
@@ -471,6 +484,25 @@ class FabricManager:
             eid = (healthy[0].expander_id if healthy
                    else next(iter(self._expanders)))
         grant = self._arbiters[eid].meter(device_id, nbytes)
+        inj = self.fault_injector
+        if inj is not None:
+            # chaos layer: active faults on this link add modeled delay
+            # (retry backoff + CRC cost + retransmission wire time,
+            # brownout inflation, retrain wait); retransmitted bytes
+            # accrue under the "retry" op class so the injector's
+            # counters reconcile with op_bytes()
+            extra_s, retry_bytes = inj.on_transfer(
+                device_id, eid, nbytes, op, grant.delay_s,
+                charge=lambda n: self._arbiters[eid].meter(
+                    device_id, n).delay_s)
+            if retry_bytes:
+                with self._lock:
+                    self._op_bytes["retry"] = (
+                        self._op_bytes.get("retry", 0) + retry_bytes)
+            if extra_s > 0.0:
+                grant = dataclasses.replace(
+                    grant, delay_s=grant.delay_s + extra_s,
+                    completion_s=grant.completion_s + extra_s)
         tr = self.tracer
         if tr.enabled:
             # dur is the MODELED link delay (virtual seconds), so span
@@ -494,10 +526,23 @@ class FabricManager:
         prefetch burst issued during one compute window has actually
         left the wire by the next (otherwise every transfer since t=0
         queues behind its predecessors and modeled delays grow without
-        bound)."""
+        bound).  Doubles as the chaos layer's clock: an attached fault
+        injector advances with the links and fires its due events here
+        (outside the lock — event handlers re-enter FM methods and
+        notify consumer callbacks)."""
         with self._lock:
             for arb in self._arbiters.values():
                 arb.advance(dt_s)
+        if self.fault_injector is not None:
+            self.fault_injector.advance(dt_s)
+
+    def attach_fault_injector(self, injector: "FaultInjector") -> None:
+        """Attach the chaos layer (repro.core.faults): the injector
+        advances with :meth:`advance_links` and perturbs every
+        :meth:`meter_transfer` per its FaultPlan.  One injector per
+        fabric; attaching a second replaces the first."""
+        injector.bind(self)
+        self.fault_injector = injector
 
     def meter_calls(self) -> int:
         """Total arbitration round-trips across every expander's link —
@@ -668,16 +713,33 @@ class FabricManager:
         expander and notify consumers (they must re-populate contents —
         data loss is the consumer's recovery problem, availability is ours).
         With nowhere to go: subsequent requests raise, consumers degrade to
-        onboard-only mode (see LinkedBuffer.degraded)."""
+        onboard-only mode (see LinkedBuffer.degraded).
+
+        Idempotent and safe: injecting an already-failed expander is a
+        journaled no-op (``fail.noop``) — running ``_fail_locked`` again
+        would re-journal the death and re-notify listeners against
+        already-purged grant state.  Injecting with no healthy expander
+        left (and no explicit target) raises instead of silently
+        re-killing a corpse."""
         with self._lock:
             if expander_id is not None:
+                exp = self._expanders.get(expander_id)
+                if exp is None:
+                    raise InvalidHandle(f"unknown expander {expander_id}")
+                if exp.failed:
+                    self.journal.append(JournalEntry(
+                        "fail.noop", "*",
+                        detail=f"expander={expander_id} already failed"))
+                    return
                 eid = expander_id
             else:
-                # default: the first HEALTHY expander — re-failing an
-                # already-dead one would be a silent no-op
                 healthy = self._healthy_expanders()
-                eid = (healthy[0].expander_id if healthy
-                       else next(iter(self._expanders)))
+                if not healthy:
+                    raise LMBError(
+                        "no healthy expander left to fail (pool is "
+                        "already empty; name a target explicitly for a "
+                        "journaled no-op)")
+                eid = healthy[0].expander_id
             self._fail_locked([eid])
         for cb in self._failover_listeners:
             cb(eid)
@@ -702,6 +764,74 @@ class FabricManager:
             for eid in eids:
                 cb(eid)
         return eids
+
+    # -- repair / re-admission -------------------------------------------------
+    def on_repair(self, cb: Callable[[int], None]) -> None:
+        """Register a consumer callback invoked with the repaired
+        expander's id after it rejoins the pool (blank)."""
+        self._repair_listeners.append(cb)
+
+    def off_repair(self, cb: Callable[[int], None]) -> None:
+        """Deregister a repair callback (consumer teardown); unknown
+        callbacks are a no-op."""
+        try:
+            self._repair_listeners.remove(cb)
+        except ValueError:
+            pass
+
+    def readmit_expander(self, expander_id: int) -> None:
+        """Repair: a failed expander rejoins the pool BLANK (the FRU was
+        replaced) — before this, a dead expander was dead forever.
+
+        The expander's grant state is reset (old block ids never return;
+        the id namespace keeps advancing, so stale capabilities cannot
+        collide with post-repair grants), its arbiter is rebuilt fresh
+        with every device's CURRENT bandwidth share replayed (exactly as
+        spare promotion does), and any grants still homed on it — the
+        total-pool-failure case, where ``_fail_locked`` had nowhere to
+        re-grant — are journaled ``lost`` and purged from the SAT/IOMMU
+        tables.  Consumers hear about it via :meth:`on_repair` (e.g.
+        ``LinkedBuffer`` exits degraded mode); host-side generation
+        counters are NOT rolled back, so handles that went stale at
+        failure stay stale after repair."""
+        with self._lock:
+            exp = self._expanders.get(expander_id)
+            if exp is None:
+                raise InvalidHandle(f"unknown expander {expander_id}")
+            if not exp.failed:
+                raise LMBError(
+                    f"expander {expander_id} is not failed; nothing to "
+                    "readmit")
+            # grants that were never re-granted elsewhere (total-pool
+            # failure) are gone for good: the repaired expander is blank
+            for host_id, grants in self._granted.items():
+                kept = []
+                for g in grants:
+                    if self._block_home.get(g.block_id) != expander_id:
+                        kept.append(g)
+                        continue
+                    self._block_home.pop(g.block_id, None)
+                    self.sat.purge_block(g.block_id)
+                    self.iommu.purge_block(g.block_id)
+                    self.journal.append(JournalEntry(
+                        "lost", host_id, g.block_id,
+                        detail="discovered at repair"))
+                self._granted[host_id] = kept
+            exp.reset()
+            exp.failed = False
+            arb = LinkArbiter(self._port_bw(expander_id))
+            self._arbiters[expander_id] = arb
+            for info in self._devices.values():
+                arb.register(info.device_id, weight=info.bw_weight,
+                             burst_bytes=info.bw_burst_bytes)
+            self.journal.append(JournalEntry(
+                "repair", "*", detail=f"expander={expander_id}"))
+        tr = self.tracer
+        if tr.enabled:
+            tr.event("fault.repair.admitted", op="fault",
+                     expander=expander_id)
+        for cb in self._repair_listeners:
+            cb(expander_id)
 
     @property
     def healthy(self) -> bool:
@@ -770,6 +900,8 @@ class FabricManager:
                 "placement": self.placement(),
                 "topology": (self.topology.snapshot()
                              if self.topology is not None else None),
+                "faults": (self.fault_injector.snapshot()
+                           if self.fault_injector is not None else None),
                 "expanders": {
                     eid: {
                         "failed": e.failed,

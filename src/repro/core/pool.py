@@ -125,6 +125,20 @@ class Expander:
         self.expander_id = expander_id
         self._next_block_id = expander_id * BLOCK_ID_STRIDE
 
+    def reset(self) -> None:
+        """Blank-media repair: forget every grant and rebuild the free
+        lists (the FRU was swapped — its contents are gone).  The
+        block-id counter is NOT rewound: ids from before the reset never
+        come back, so stale references cannot alias post-repair grants.
+        The FM's ``readmit_expander`` is the only caller; it also clears
+        ``failed`` and purges its own tables."""
+        self._grants.clear()
+        self._free = {
+            d.dmp_id: list(range(d.dpa_base, d.dpa_base + d.nbytes,
+                                 BLOCK_BYTES))
+            for d in self._dmps
+        }
+
     # -- capacity ----------------------------------------------------------
     @property
     def total_bytes(self) -> int:

@@ -58,6 +58,8 @@ class TenantSLO:
     admitted_count: int = 0
     throttled_count: int = 0
     shed_count: int = 0
+    #: requests cancelled after admission (deadline expiry / capacity loss)
+    cancelled_count: int = 0
 
     def observe(self, latency_s: float) -> None:
         self._lat.append(latency_s)
@@ -154,6 +156,11 @@ class AdmissionController:
     def observe(self, tenant_id: str, latency_s: float) -> None:
         self.tenant(tenant_id).observe(latency_s)
 
+    def record_cancel(self, tenant_id: str) -> None:
+        """A previously admitted request was cancelled (deadline expiry or
+        mid-flight capacity loss) — counted against the tenant's SLO."""
+        self.tenant(tenant_id).cancelled_count += 1
+
     # -- introspection -------------------------------------------------------
     def snapshot(self) -> dict:
         return {
@@ -169,6 +176,7 @@ class AdmissionController:
                     "admitted_count": t.admitted_count,
                     "throttled_count": t.throttled_count,
                     "shed_count": t.shed_count,
+                    "cancelled_count": t.cancelled_count,
                 }
                 for tid, t in self._tenants.items()
             },

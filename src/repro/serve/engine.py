@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.api import LMBHost
 from repro.core.client import LMBSystem
+from repro.core.pool import OutOfMemory
 from repro.models.zoo import Model
 from repro.obs.trace import DEFAULT_RING_CAPACITY, SpanTracer
 from repro.qos.slo import AdmissionController, Decision
@@ -59,12 +60,20 @@ class SubmitSpec:
     #: per-request SLO deadline (seconds from arrival to completion);
     #: recorded on the request for policy layers, not enforced here
     slo_deadline_s: Optional[float] = None
+    #: hard deadline (seconds from arrival): a request not finished by
+    #: ``arrival + deadline_s`` is CANCELLED — removed from the queue or
+    #: pulled out of its decode slot mid-flight, its KV pages freed, and
+    #: counted per-tenant (``cancelled_count`` in the SLO snapshot).
+    #: ``None`` means no enforcement (the pre-deadline behavior).
+    deadline_s: Optional[float] = None
 
     def __post_init__(self):
         object.__setattr__(self, "prompt",
                            np.asarray(self.prompt, np.int32))
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.deadline_s is not None and self.deadline_s < 0:
+            raise ValueError("deadline_s must be >= 0")
 
 
 @dataclasses.dataclass
@@ -75,12 +84,16 @@ class Request:
     tenant: str = "default"
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     seq_id: Optional[int] = None
-    state: str = "waiting"             # waiting|active|preempted|done|shed
+    state: str = "waiting"     # waiting|active|preempted|done|shed|cancelled
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     last_token_at: Optional[float] = None
     done_at: Optional[float] = None
     slo_deadline_s: Optional[float] = None
+    #: absolute engine-clock instant after which the request is cancelled
+    deadline_s: Optional[float] = None
+    #: why a cancelled request was cancelled ("deadline" | "capacity")
+    cancel_reason: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -144,6 +157,7 @@ class ServeEngine:
         #: VirtualClock so latency figures are machine-independent
         self.clock: Callable[[], float] = clock or time.monotonic
         self.shed: List[int] = []
+        self.cancelled: List[int] = []
         self._tenant_live: Dict[str, int] = {}   # in-flight reqs per tenant
         self.metrics = host.metrics
         self._fm = host.fm              # link drain + placement queries
@@ -202,7 +216,9 @@ class ServeEngine:
                    else spec.arrival_time_s)
         req = Request(rid, spec.prompt, spec.max_new_tokens,
                       tenant=spec.tenant, submitted_at=arrived,
-                      slo_deadline_s=spec.slo_deadline_s)
+                      slo_deadline_s=spec.slo_deadline_s,
+                      deadline_s=(None if spec.deadline_s is None
+                                  else arrived + spec.deadline_s))
         self.requests[rid] = req
         self.waiting.append(req)
         self._tenant_live[spec.tenant] = (
@@ -258,9 +274,51 @@ class ServeEngine:
             return Decision.ADMIT
         return self.qos.decide(req.tenant)
 
+    def _cancel(self, req: Request, reason: str) -> None:
+        """Terminal bookkeeping for a deadline-expired or capacity-starved
+        request: its KV sequence is freed mid-flight (LMB pages return to
+        the pool), the tenant's SLO record counts the cancellation, and
+        the tenant's link demand is released once nothing of theirs is
+        left in flight.  Callers remove the request from whichever
+        structure held it (waiting deque / active slot)."""
+        req.state = "cancelled"
+        req.cancel_reason = reason
+        req.done_at = self.clock()
+        if req.seq_id is not None:
+            self.kv.free_seq(req.seq_id)
+            req.seq_id = None
+        self.cancelled.append(req.req_id)
+        self._tenant_live[req.tenant] -= 1
+        if self.qos is not None:
+            self.qos.record_cancel(req.tenant)
+            if self._tenant_live[req.tenant] <= 0:
+                self.qos.release(req.tenant)
+        tr = self.trace
+        if tr.enabled:
+            tr.event("cancel", tenant=req.tenant, op="serve",
+                     req=req.req_id, reason=reason)
+
+    def _expire_waiting(self) -> None:
+        """Drop queued (waiting or preempted-and-requeued) requests whose
+        deadline has passed, preserving arrival order for the rest.  A
+        preempted request's parked KV is freed here too."""
+        if not any(r.deadline_s is not None for r in self.waiting):
+            return
+        now = self.clock()
+        keep: List[Request] = []
+        for req in self.waiting:
+            if req.deadline_s is not None and now >= req.deadline_s:
+                self._cancel(req, "deadline")
+            else:
+                keep.append(req)
+        if len(keep) != len(self.waiting):
+            self.waiting = deque(keep)
+
     def _admit(self) -> None:
+        self._expire_waiting()
         considered = 0
         limit = len(self.waiting)   # each waiter gets one decision per round
+        deferred: List[Request] = []   # throttled this round
         while self.waiting and self._slot_free and considered < limit:
             considered += 1
             req = self.waiting.popleft()
@@ -271,18 +329,31 @@ class ServeEngine:
                 self._tenant_live[req.tenant] -= 1
                 continue
             if decision is Decision.THROTTLE:
-                self.waiting.append(req)       # retry a later round
+                # retry a later round — deferred requests return to the
+                # FRONT of the queue in arrival order (they arrived before
+                # everything still waiting), so a throttled tenant cannot
+                # leapfrog, and a permanently-throttled one cannot starve
+                # later arrivals: each waiter still gets exactly one
+                # decision per round, and the deadline bounds its retries
+                deferred.append(req)
                 continue
-            if req.state == "preempted":
-                self.kv.schedule_swap_in(req.seq_id)   # LMB -> onboard
-            else:
-                self._prefill(req)
+            try:
+                if req.state == "preempted":
+                    self.kv.schedule_swap_in(req.seq_id)  # LMB -> onboard
+                else:
+                    self._prefill(req)
+            except OutOfMemory:
+                # pool too degraded to hold the KV (e.g. expander failed
+                # with no spare): cancel instead of crashing the engine
+                self._cancel(req, "capacity")
+                continue
             # NOTE: active requests decode from their dense slot cache; the
             # paged store is the park/share tier, so nothing is pinned and
             # cold pages may spill to the LMB pool freely.
             slot = self._slot_free.pop()
             req.state = "active"
             self.active[slot] = req
+        self.waiting.extendleft(reversed(deferred))
 
     def preempt(self, slot: int) -> None:
         """Evict a running request: its KV pages demote to the LMB tier
@@ -381,6 +452,14 @@ class ServeEngine:
         round_t0 = time.monotonic()
         finished = 0
         for slot, req in list(self.active.items()):
+            if (req.deadline_s is not None
+                    and self.clock() >= req.deadline_s):
+                # mid-flight cancellation: pull the request out of its
+                # decode slot and free its KV sequence immediately
+                self._cancel(req, "deadline")
+                del self.active[slot]
+                self._slot_free.append(slot)
+                continue
             tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
             logits, req._cache = self._decode_fn(self.params, req._cache,
                                                  tok)
@@ -396,10 +475,18 @@ class ServeEngine:
                              req=req.req_id, gap_s=gap)
             req.last_token_at = now
             kv_new = self._decode_kv_tail(req._cache)
-            if kv_new is not None:
-                self.kv.append_tokens(req.seq_id, kv_new)
-            else:
-                self.kv.seq(req.seq_id).length += 1
+            try:
+                if kv_new is not None:
+                    self.kv.append_tokens(req.seq_id, kv_new)
+                else:
+                    self.kv.seq(req.seq_id).length += 1
+            except OutOfMemory:
+                # the pool shrank under us (failover mid-decode): free
+                # what the sequence still holds and release the slot
+                self._cancel(req, "capacity")
+                del self.active[slot]
+                self._slot_free.append(slot)
+                continue
             if len(req.out_tokens) >= req.max_new_tokens:
                 req.state = "done"
                 req.done_at = self.clock()
@@ -458,6 +545,7 @@ class ServeEngine:
             "waiting": len(self.waiting),
             "active": len(self.active),
             "shed": len(self.shed),
+            "cancelled": len(self.cancelled),
             "mean_ttft_s": float(np.mean(ttft)) if ttft else None,
             "latency": latency,
             "trace": self.trace.snapshot(),

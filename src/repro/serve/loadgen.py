@@ -96,6 +96,9 @@ class TenantLoad:
     max_new_tokens: tuple = (4, 8)
     #: optional per-request SLO deadline stamped on every SubmitSpec
     slo_deadline_s: Optional[float] = None
+    #: optional hard deadline (seconds from arrival) stamped on every
+    #: SubmitSpec — expired requests are cancelled by the engine
+    deadline_s: Optional[float] = None
 
 
 def build_trace(tenants: Sequence[TenantLoad], *, vocab_size: int,
@@ -127,7 +130,8 @@ def build_trace(tenants: Sequence[TenantLoad], *, vocab_size: int,
                 max_new_tokens=int(rng.integers(m_lo, m_hi + 1)),
                 tenant=tl.name,
                 arrival_time_s=float(t),
-                slo_deadline_s=tl.slo_deadline_s)))
+                slo_deadline_s=tl.slo_deadline_s,
+                deadline_s=tl.deadline_s)))
     events.sort(key=lambda e: (e[0], e[1], e[2]))
     return [spec for *_key, spec in events]
 
@@ -166,6 +170,7 @@ def _tenant_rows(engine: ServeEngine) -> Dict[str, dict]:
     tenants = sorted({name.split(".", 2)[2] for name in lat})
     shed_by_tenant: Dict[str, int] = {}
     done_by_tenant: Dict[str, int] = {}
+    cancelled_by_tenant: Dict[str, int] = {}
     for req in engine.requests.values():
         if req.state == "shed":
             shed_by_tenant[req.tenant] = shed_by_tenant.get(req.tenant,
@@ -173,6 +178,9 @@ def _tenant_rows(engine: ServeEngine) -> Dict[str, dict]:
         elif req.state == "done":
             done_by_tenant[req.tenant] = done_by_tenant.get(req.tenant,
                                                             0) + 1
+        elif req.state == "cancelled":
+            cancelled_by_tenant[req.tenant] = cancelled_by_tenant.get(
+                req.tenant, 0) + 1
     rows = {}
     for t in tenants:
         ttft = lat.get(f"serve.ttft.{t}")
@@ -180,6 +188,7 @@ def _tenant_rows(engine: ServeEngine) -> Dict[str, dict]:
         rows[t] = {
             "done": done_by_tenant.get(t, 0),
             "shed": shed_by_tenant.get(t, 0),
+            "cancelled": cancelled_by_tenant.get(t, 0),
             "ttft_count": ttft["count"] if ttft else 0,
             "ttft_p50_s": ttft["p50"] if ttft else 0.0,
             "ttft_p99_s": ttft["p99"] if ttft else 0.0,
@@ -192,7 +201,8 @@ def _tenant_rows(engine: ServeEngine) -> Dict[str, dict]:
 
 def run_sweep(engine: ServeEngine, trace: Sequence[SubmitSpec],
               clock: VirtualClock, *, round_s: Optional[float] = None,
-              max_rounds: int = 100_000) -> SweepReport:
+              max_rounds: int = 100_000,
+              drain_idle_gaps: bool = False) -> SweepReport:
     """Replay a trace against the engine on a virtual clock.
 
     Open-loop: each round releases every arrival whose timestamp is due,
@@ -202,6 +212,12 @@ def run_sweep(engine: ServeEngine, trace: Sequence[SubmitSpec],
     the clock jumps to the next arrival instead of spinning empty
     rounds.  Runs until the trace is exhausted and the engine is idle
     (or ``max_rounds``, a runaway guard).
+
+    ``drain_idle_gaps``: also advance the fabric's link clock across
+    those idle jumps.  Off by default — it would let links drain (and is
+    therefore visible in exposed-wait figures) — but chaos runs need it
+    so a :class:`~repro.core.faults.FaultInjector`'s event clock tracks
+    virtual time through quiet stretches of the trace.
     """
     if round_s is None:
         round_s = engine.ecfg.round_time_s
@@ -227,7 +243,10 @@ def run_sweep(engine: ServeEngine, trace: Sequence[SubmitSpec],
             engine.submit(trace[i])
             i += 1
         if not (engine.waiting or engine.active):
+            gap = trace[i].arrival_time_s - clock.now
             clock.advance_to(trace[i].arrival_time_s)
+            if drain_idle_gaps and gap > 0.0:
+                engine._fm.advance_links(gap)
             continue
         engine.step()
         clock.advance(round_s)
@@ -244,6 +263,7 @@ def run_sweep(engine: ServeEngine, trace: Sequence[SubmitSpec],
         "requests": len(trace),
         "done": st["done"],
         "shed": st["shed"],
+        "cancelled": st["cancelled"],
         "peak_concurrent": peak_concurrent,
         "peak_lmb_resident_pages": peak_lmb_pages,
         "exposed_link_wait_s": kv["link_wait_s"],

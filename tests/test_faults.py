@@ -1,0 +1,367 @@
+"""Transient-fault chaos layer: FaultPlan execution, retry/backoff,
+escalation, brownout-aware placement, link flap, fail-stop idempotency,
+and repair/re-admission (the degraded-mode EXIT path).
+
+Covers the fault taxonomy end to end on real systems (system_for), plus
+the two robustness satellites: ``FabricManager.inject_failure`` must be
+idempotent/safe (double-inject and empty-pool are journaled no-ops or
+typed errors, never grant corruption), and ``LinkedBuffer.degraded``
+must be exit-able — repair restores paging and SAT/IOMMU mappings while
+handles freed during the outage stay stale.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FaultEvent, FaultInjector, FaultPlan, InvalidHandle,
+                        LMBError, OutOfMemory, RetryPolicy, StaleHandle,
+                        system_for)
+from repro.core.metrics import Metrics
+
+PAGE = (4, 4)
+
+
+def one_expander_system():
+    return system_for("d0", host_id="h0", pool_gib=1, page_bytes=4096,
+                      metrics=Metrics())
+
+
+# ------------------------------------------------------------- validation
+class TestPlanValidation:
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            FaultEvent(t_s=0.0, kind="gamma_ray")
+
+    def test_negative_time_rejected(self):
+        with pytest.raises(ValueError):
+            FaultEvent(t_s=-1.0, kind="transient")
+
+    def test_expander_and_domain_exclusive(self):
+        with pytest.raises(ValueError):
+            FaultEvent(t_s=0.0, kind="transient", expander_id=0,
+                       domain="pd0")
+
+    def test_error_rate_bounds(self):
+        with pytest.raises(ValueError):
+            FaultEvent(t_s=0.0, kind="transient", error_rate=1.5)
+
+    def test_brownout_needs_inflating_factor(self):
+        with pytest.raises(ValueError):
+            FaultEvent(t_s=0.0, kind="brownout", latency_factor=0.5)
+
+    def test_plan_sorts_events_by_time(self):
+        plan = FaultPlan((FaultEvent(t_s=2.0, kind="repair", expander_id=0),
+                          FaultEvent(t_s=1.0, kind="fail_stop",
+                                     expander_id=0)))
+        assert [e.t_s for e in plan.events] == [1.0, 2.0]
+        assert len(plan) == 2
+
+    def test_storm_helper(self):
+        plan = FaultPlan.storm(t0_s=0.5, duration_s=1.0, error_rate=0.3)
+        assert len(plan) == 1
+        assert plan.events[0].kind == "transient"
+
+    def test_retry_policy_validation(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_retries=-1)
+        with pytest.raises(ValueError):
+            RetryPolicy(jitter=1.5)
+
+    def test_backoff_bounded_and_jittered(self):
+        pol = RetryPolicy(backoff_base_s=1e-6, backoff_multiplier=2.0,
+                          backoff_max_s=1e-4, jitter=0.1)
+        # attempt 0 at u=0.5 is exactly the base; cap binds eventually
+        assert pol.backoff_s(0, 0.5) == pytest.approx(1e-6)
+        assert pol.backoff_s(50, 0.5) == pytest.approx(1e-4)
+        lo, hi = pol.backoff_s(3, 0.0), pol.backoff_s(3, 1.0)
+        assert lo == pytest.approx(8e-6 * 0.9)
+        assert hi == pytest.approx(8e-6 * 1.1)
+
+
+# ---------------------------------------------------------- zero-fault id
+class TestZeroFaultIdentity:
+    def test_attached_empty_plan_is_inert(self):
+        def run(plan):
+            system = one_expander_system()
+            if plan is not None:
+                system.attach_fault_injector(plan)
+            host = system.host()
+            a = host.alloc("d0", 1 << 20)
+            delays = [host.meter_transfer("d0", 1 << 16, a.mmid)
+                      for _ in range(16)]
+            system.fm.advance_links(1e-3)
+            return delays, dict(system.fm.op_bytes())
+
+        d0, ob0 = run(None)
+        d1, ob1 = run(FaultPlan())
+        assert d0 == d1
+        assert ob0 == ob1
+        assert "retry" not in ob1
+
+    def test_bind_refuses_second_fabric(self):
+        inj = FaultInjector(FaultPlan())
+        s1, s2 = one_expander_system(), one_expander_system()
+        s1.fm.attach_fault_injector(inj)
+        with pytest.raises(LMBError):
+            s2.fm.attach_fault_injector(inj)
+
+
+# ------------------------------------------------------------- transient
+class TestTransientRetry:
+    def test_storm_costs_time_and_reconciles_bytes(self):
+        system = one_expander_system()
+        inj = system.attach_fault_injector(
+            FaultPlan.storm(t0_s=0.0, duration_s=10.0, error_rate=0.5),
+            seed=3)
+        host = system.host()
+        a = host.alloc("d0", 1 << 20)
+        system.fm.advance_links(1e-9)          # open the error window
+        base = None
+        for _ in range(32):
+            host.meter_transfer("d0", 1 << 16, a.mmid)
+        ctr = inj.counters()
+        assert ctr["transient_errors"] > 0
+        assert ctr["retries"] >= ctr["transient_errors"] * 0  # sane
+        assert ctr["retry_delay_s"] > 0.0
+        # retransmitted bytes land in the FM's "retry" op class, exactly
+        assert system.fm.op_bytes()["retry"] == ctr["retry_bytes"]
+        assert system.fm.healthy               # no escalation at rate 0.5
+
+    def test_deterministic_given_seed(self):
+        def counters(seed):
+            system = one_expander_system()
+            inj = system.attach_fault_injector(
+                FaultPlan.storm(t0_s=0.0, duration_s=10.0, error_rate=0.5),
+                seed=seed)
+            host = system.host()
+            a = host.alloc("d0", 1 << 20)
+            system.fm.advance_links(1e-9)
+            for _ in range(32):
+                host.meter_transfer("d0", 1 << 16, a.mmid)
+            return inj.counters()
+
+        assert counters(11) == counters(11)
+        assert counters(11) != counters(12)
+
+    def test_retries_disabled_escalates_to_failover(self):
+        system = one_expander_system()
+        system.attach_fault_injector(
+            FaultPlan.storm(t0_s=0.0, duration_s=10.0, error_rate=1.0),
+            retry=RetryPolicy(max_retries=0))
+        host = system.host()
+        a = host.alloc("d0", 1 << 20)
+        system.fm.advance_links(1e-9)
+        host.meter_transfer("d0", 1 << 16, a.mmid)   # first error
+        assert system.fm.healthy               # deferred to the heartbeat
+        system.fm.advance_links(1e-3)          # heartbeat applies it
+        assert not system.fm.healthy
+
+    def test_budget_exhaustion_escalates(self):
+        system = one_expander_system()
+        inj = system.attach_fault_injector(
+            FaultPlan.storm(t0_s=0.0, duration_s=10.0, error_rate=1.0),
+            retry=RetryPolicy(max_retries=4, link_retry_budget=4))
+        host = system.host()
+        a = host.alloc("d0", 1 << 20)
+        system.fm.advance_links(1e-9)
+        host.meter_transfer("d0", 1 << 16, a.mmid)   # burns all 4 budget
+        assert inj.counters()["escalations"] == 1
+        system.fm.advance_links(1e-3)
+        assert not system.fm.healthy
+
+    def test_budget_survives_while_it_lasts(self):
+        system = one_expander_system()
+        inj = system.attach_fault_injector(
+            FaultPlan.storm(t0_s=0.0, duration_s=10.0, error_rate=0.4),
+            retry=RetryPolicy(link_retry_budget=10_000), seed=5)
+        host = system.host()
+        a = host.alloc("d0", 1 << 20)
+        system.fm.advance_links(1e-9)
+        for _ in range(64):
+            host.meter_transfer("d0", 1 << 16, a.mmid)
+        system.fm.advance_links(1e-3)
+        assert system.fm.healthy
+        assert inj.counters()["escalations"] == 0
+
+
+# ------------------------------------------------------ brownout and flap
+class TestBrownoutAndFlap:
+    def test_brownout_inflates_delay_for_the_window(self):
+        system = one_expander_system()
+        inj = system.attach_fault_injector(FaultPlan((
+            FaultEvent(t_s=0.0, kind="brownout", duration_s=1.0,
+                       latency_factor=5.0),)))
+        host = system.host()
+        a = host.alloc("d0", 1 << 20)
+        system.fm.advance_links(1e-9)
+        d_in = host.meter_transfer("d0", 1 << 20, a.mmid)
+        system.fm.advance_links(5.0)           # window over
+        d_out = host.meter_transfer("d0", 1 << 20, a.mmid)
+        assert d_in > d_out
+        assert inj.counters()["brownout_delay_s"] > 0.0
+
+    def test_brownout_saturates_placement_view(self):
+        system = system_for("d0", host_id="h0", pool_gib=1,
+                            page_bytes=4096, n_expanders=2,
+                            metrics=Metrics())
+        eids = sorted(system.fm.expander_ids)
+        inj = system.attach_fault_injector(FaultPlan((
+            FaultEvent(t_s=0.0, kind="brownout", duration_s=10.0,
+                       latency_factor=4.0, expander_id=eids[0]),)))
+        system.fm.advance_links(1e-9)
+        assert inj.brownout_active(eids[0])
+        # least-loaded (the migration-target query) steers off the brown
+        # expander even though its real utilization is identical
+        assert system.fm.least_loaded_expander() == eids[1]
+
+    def test_flap_queues_transfers_until_retrained(self):
+        system = one_expander_system()
+        inj = system.attach_fault_injector(FaultPlan((
+            FaultEvent(t_s=0.0, kind="link_flap", retrain_s=0.25),)))
+        host = system.host()
+        a = host.alloc("d0", 1 << 20)
+        system.fm.advance_links(1e-9)
+        d = host.meter_transfer("d0", 1 << 10, a.mmid)
+        assert d >= 0.25 - 1e-9                # waited out the retrain
+        assert inj.counters()["flap_delay_s"] == pytest.approx(
+            0.25 - 1e-9, abs=1e-6)
+        system.fm.advance_links(1.0)
+        assert host.meter_transfer("d0", 1 << 10, a.mmid) < 0.25
+
+
+# ----------------------------------------- satellite: inject_failure safety
+class TestInjectFailureSafety:
+    def test_double_inject_is_journaled_noop(self):
+        system = system_for("d0", pool_gib=1, n_expanders=2,
+                            metrics=Metrics())
+        h0 = system.alloc("d0", 4096, expander_id=0)
+        system.inject_failure(0)
+        state_before = system.fm.placement()
+        gen_before = system.host().generation_of(0)
+        system.inject_failure(0)               # again: must not corrupt
+        assert system.fm.placement() == state_before
+        assert system.host().generation_of(0) == gen_before
+        noops = [e for e in system.fm.journal if e.op == "fail.noop"]
+        assert len(noops) == 1
+        assert "expander=0" in noops[0].detail
+        assert h0.stale
+
+    def test_default_inject_on_empty_pool_raises(self):
+        system = one_expander_system()
+        system.inject_failure()
+        with pytest.raises(LMBError) as ei:
+            system.inject_failure()            # nothing healthy left
+        assert "no healthy expander" in str(ei.value)
+
+    def test_explicit_inject_on_empty_pool_noops(self):
+        system = one_expander_system()
+        eid = system.fm.expander_ids[0]
+        system.inject_failure(eid)
+        system.inject_failure(eid)             # journaled no-op, no raise
+        assert any(e.op == "fail.noop" for e in system.fm.journal)
+
+    def test_unknown_expander_rejected(self):
+        system = one_expander_system()
+        with pytest.raises(InvalidHandle):
+            system.inject_failure(999)
+
+
+# -------------------------------------------- repair and degraded-mode exit
+class TestRepairReadmission:
+    def test_readmit_unknown_rejected(self):
+        system = one_expander_system()
+        with pytest.raises(InvalidHandle):
+            system.readmit_expander(999)
+
+    def test_readmit_healthy_rejected(self):
+        system = one_expander_system()
+        with pytest.raises(LMBError):
+            system.readmit_expander(system.fm.expander_ids[0])
+
+    def test_repair_restores_alloc_and_access(self):
+        system = one_expander_system()
+        eid = system.fm.expander_ids[0]
+        system.inject_failure(eid)
+        assert not system.fm.healthy
+        system.readmit_expander(eid)
+        assert system.fm.healthy
+        assert any(e.op == "repair" for e in system.fm.journal)
+        # the readmitted expander serves fresh grants with live mappings
+        h = system.alloc("d0", 4096)
+        system.host().check_access("d0", h.mmid)
+        h.free()
+
+    def test_stale_handles_stay_stale_after_repair(self):
+        """Generations do NOT roll back: a pre-failure capability must
+        not resurrect when the (blank) expander rejoins."""
+        system = one_expander_system()
+        h = system.alloc("d0", 4096)
+        eid = system.fm.expander_ids[0]
+        system.inject_failure(eid)
+        assert h.stale
+        system.readmit_expander(eid)
+        assert h.stale
+        with pytest.raises(StaleHandle):
+            h.expander()
+        with pytest.raises(StaleHandle):
+            h.free()
+
+    def test_buffer_exits_degraded_and_pages_again(self):
+        system = one_expander_system()
+        buf = system.buffer(name="b", device_id="d0", page_shape=PAGE,
+                            onboard_pages=2, lmb_chunk_pages=4,
+                            metrics=Metrics())
+        pages = buf.append_pages(4)            # spills into the LMB tier
+        for p in pages:
+            buf.write(p, jnp.full(PAGE, float(p), jnp.float32))
+        eid = system.fm.expander_ids[0]
+        system.inject_failure(eid)
+        assert buf.degraded
+        with pytest.raises(OutOfMemory):
+            for p in buf.append_pages(4):      # LMB growth refused
+                buf.write(p, jnp.ones(PAGE, jnp.float32))
+        system.readmit_expander(eid)
+        assert not buf.degraded                # the ladder's last rung
+        fresh = buf.append_pages(4)            # paging works again
+        for p in fresh:
+            buf.write(p, jnp.full(PAGE, float(p), jnp.float32))
+        got = buf.read_many(fresh)
+        assert np.asarray(got)[:, 0, 0].tolist() == [float(p)
+                                                     for p in fresh]
+        buf.check_invariants()
+
+    def test_closed_buffer_stays_degraded_after_repair(self):
+        system = one_expander_system()
+        buf = system.buffer(name="c", device_id="d0", page_shape=PAGE,
+                            onboard_pages=2, lmb_chunk_pages=4,
+                            metrics=Metrics())
+        eid = system.fm.expander_ids[0]
+        system.inject_failure(eid)
+        buf.close()
+        system.readmit_expander(eid)
+        assert buf.degraded                    # close() is terminal
+
+    def test_scripted_fail_stop_then_repair(self):
+        """The same ladder driven entirely by a FaultPlan."""
+        system = one_expander_system()
+        eid = system.fm.expander_ids[0]
+        inj = system.attach_fault_injector(FaultPlan((
+            FaultEvent(t_s=1.0, kind="fail_stop", expander_id=eid),
+            FaultEvent(t_s=2.0, kind="repair", expander_id=eid))))
+        system.fm.advance_links(1.5)
+        assert not system.fm.healthy
+        system.fm.advance_links(1.0)
+        assert system.fm.healthy
+        snap = inj.snapshot()
+        assert snap["events_fired"] == 2
+        # repair refilled the link's fault state
+        assert not snap["links"][eid]["escalated"]
+
+    def test_fm_snapshot_carries_fault_state(self):
+        system = one_expander_system()
+        assert system.fm.snapshot()["faults"] is None
+        system.attach_fault_injector(FaultPlan())
+        snap = system.fm.snapshot()["faults"]
+        assert snap["events_total"] == 0
+        assert "counters" in snap

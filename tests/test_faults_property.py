@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) on the chaos layer's determinism
+contract (repro.core.faults):
+
+  * **zero-fault identity** — attaching an injector with an empty plan
+    changes NOTHING: per-transfer delays, per-class op_bytes, and link
+    state are byte-identical to a run with no injector, for arbitrary
+    transfer sequences.
+  * **retry-time monotonicity** — for a fixed seed and transfer
+    sequence, total modeled retry delay is monotone (non-decreasing) in
+    the transient error rate.  This is a *coupling* property: the
+    per-transfer seeded substreams guarantee transfer *i* sees the same
+    uniforms at every rate, so a higher rate's error set is a superset.
+  * **retry-byte conservation** — the injector's ``retry_bytes``
+    counter reconciles exactly with the FM's ``op_bytes()["retry"]``
+    accounting class, whatever the storm.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import FaultPlan, RetryPolicy, system_for
+from repro.core.metrics import Metrics
+
+
+def fresh_system():
+    return system_for("d0", host_id="h0", pool_gib=1, page_bytes=4096,
+                      metrics=Metrics())
+
+
+def run_storm(error_rate, sizes, *, seed, retry=None):
+    """One deterministic storm run; returns (delays, counters, op_bytes).
+
+    No ``advance`` during the measured transfers, so escalations (if
+    any) stay pending and the transfer sequence is identical across
+    error rates — the coupling the monotonicity property needs.
+    """
+    system = fresh_system()
+    plan = (FaultPlan() if error_rate == 0.0 else
+            FaultPlan.storm(t0_s=0.0, duration_s=1e9,
+                            error_rate=error_rate))
+    inj = system.attach_fault_injector(plan, retry=retry, seed=seed)
+    host = system.host()
+    a = host.alloc("d0", 1 << 20)
+    system.fm.advance_links(0.0)          # fire the t=0 window
+    delays = [host.meter_transfer("d0", nb, a.mmid) for nb in sizes]
+    return delays, inj.counters(), dict(system.fm.op_bytes())
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.integers(1 << 8, 1 << 18), min_size=1, max_size=24),
+       st.integers(0, 2 ** 31))
+def test_zero_fault_plan_is_byte_identical(sizes, seed):
+    system0 = fresh_system()
+    host0 = system0.host()
+    a0 = host0.alloc("d0", 1 << 20)
+    base = [host0.meter_transfer("d0", nb, a0.mmid) for nb in sizes]
+    delays, ctr, ob = run_storm(0.0, sizes, seed=seed)
+    assert delays == base
+    assert ob == dict(system0.fm.op_bytes())
+    assert "retry" not in ob
+    assert ctr["transient_errors"] == 0 and ctr["retries"] == 0
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.integers(1 << 8, 1 << 16), min_size=1, max_size=16),
+       st.integers(0, 2 ** 31),
+       st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_retry_delay_monotone_in_error_rate(sizes, seed, r_a, r_b):
+    r_lo, r_hi = sorted((r_a, r_b))
+    # unlimited budget isolates the monotone-cost property from
+    # escalation side effects (which change the fabric mid-sequence)
+    pol = RetryPolicy(link_retry_budget=None)
+    _, ctr_lo, _ = run_storm(r_lo, sizes, seed=seed, retry=pol)
+    _, ctr_hi, _ = run_storm(r_hi, sizes, seed=seed, retry=pol)
+    assert ctr_hi["retry_delay_s"] >= ctr_lo["retry_delay_s"]
+    assert ctr_hi["transient_errors"] >= ctr_lo["transient_errors"]
+    assert ctr_hi["retries"] >= ctr_lo["retries"]
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(st.integers(1 << 8, 1 << 16), min_size=1, max_size=16),
+       st.integers(0, 2 ** 31), st.floats(0.05, 0.95))
+def test_retry_bytes_reconcile_with_fm_accounting(sizes, seed, rate):
+    pol = RetryPolicy(link_retry_budget=None)
+    _, ctr, ob = run_storm(rate, sizes, seed=seed, retry=pol)
+    assert ob.get("retry", 0) == ctr["retry_bytes"]
+    # every retry retransmitted one of the submitted sizes
+    if ctr["retries"] == 0:
+        assert ctr["retry_bytes"] == 0
+    else:
+        assert ctr["retry_bytes"] >= ctr["retries"] * min(sizes)
+        assert ctr["retry_bytes"] <= ctr["retries"] * max(sizes)

@@ -31,11 +31,12 @@ def served():
 def make_engine(served, **kw):
     cfg, model, params = served
     qos = kw.pop("qos", None)
+    clock = kw.pop("clock", None)
     defaults = dict(decode_slots=2, max_seq_len=64, page_tokens=8,
                     onboard_pages=8, prefill_bucket=16)
     defaults.update(kw)
     return ServeEngine(model, params, fresh_system(), EngineConfig(
-        **defaults), qos=qos)
+        **defaults), qos=qos, clock=clock)
 
 
 def test_requests_complete(served):
@@ -204,6 +205,162 @@ def test_per_tenant_latency_attribution(served):
         assert len(tok_spans) == 3 * len(ids)
         assert {s.args["req"] for s in ttft_spans} == set(ids)
     assert st["trace"]["enabled"] and st["trace"]["count"] == len(spans)
+
+
+def test_deadline_expires_waiting_request(served):
+    """A queued request whose deadline passes is cancelled in place —
+    never seated, never prefilled, counted in engine stats."""
+    from repro.serve import VirtualClock
+
+    clock = VirtualClock()
+    eng = make_engine(served, decode_slots=1, clock=clock)
+    rng = np.random.default_rng(0)
+    r1 = eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 10),
+                               max_new_tokens=8))
+    r2 = eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 10),
+                               max_new_tokens=4, deadline_s=0.5))
+    eng.step()                       # r1 takes the only slot
+    assert eng.requests[r2].state == "waiting"
+    clock.advance(1.0)               # past r2's deadline
+    eng.step()
+    req = eng.requests[r2]
+    assert req.state == "cancelled" and req.cancel_reason == "deadline"
+    assert req.seq_id is None        # nothing was ever allocated for it
+    eng.run(200)
+    assert eng.requests[r1].state == "done"
+    st = eng.stats()
+    assert st["cancelled"] == 1 and st["done"] == 1
+
+
+def test_deadline_cancels_active_mid_flight(served):
+    """An ACTIVE request past its deadline is pulled out of its decode
+    slot and its KV sequence freed mid-flight."""
+    from repro.serve import VirtualClock
+
+    clock = VirtualClock()
+    eng = make_engine(served, decode_slots=1, clock=clock)
+    rng = np.random.default_rng(1)
+    rid = eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 10),
+                                max_new_tokens=64, deadline_s=0.5))
+    eng.step()
+    req = eng.requests[rid]
+    assert req.state == "active" and req.seq_id is not None
+    clock.advance(1.0)
+    eng.step()
+    assert req.state == "cancelled" and req.cancel_reason == "deadline"
+    assert req.seq_id is None        # KV freed mid-flight
+    assert not eng.active            # slot returned
+    assert len(eng._slot_free) == 1
+    eng.kv.buf.check_invariants()
+
+
+def test_cancellation_counted_per_tenant_slo(served):
+    """Deadline cancellations land in the tenant's SLO record."""
+    from repro.qos import AdmissionController, SLOTarget
+    from repro.serve import VirtualClock
+
+    ctrl = AdmissionController(link_bandwidth_Bps=10e9)
+    ctrl.register("gold", target=SLOTarget(p99_latency_s=100.0),
+                  demand_Bps=1e6, base_latency_s=0.01)
+    clock = VirtualClock()
+    eng = make_engine(served, decode_slots=1, qos=ctrl, clock=clock)
+    rng = np.random.default_rng(2)
+    blocker = eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 10),
+                                    max_new_tokens=8, tenant="gold"))
+    doomed = eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 10),
+                                   max_new_tokens=4, tenant="gold",
+                                   deadline_s=0.25))
+    eng.step()
+    clock.advance(1.0)
+    eng.run(200)
+    assert eng.requests[blocker].state == "done"
+    assert eng.requests[doomed].state == "cancelled"
+    snap = eng.stats()["qos"]["tenants"]["gold"]
+    assert snap["cancelled_count"] == 1
+    assert not snap["admitted"]      # demand released after the cancel
+
+
+def test_throttle_preserves_fifo_and_cannot_starve(served):
+    """Satellite regression: a throttled request returns to the FRONT of
+    the queue in arrival order (no tail-requeue reordering), and a
+    permanently-throttled tenant cannot starve later arrivals — its
+    deadline bounds the retries."""
+    from repro.qos.slo import Decision
+    from repro.serve import VirtualClock
+
+    class AlwaysThrottle:
+        """Throttles one tenant forever, admits everyone else."""
+
+        def __init__(self, victim):
+            self.victim = victim
+
+        def decide(self, tenant):
+            return (Decision.THROTTLE if tenant == self.victim
+                    else Decision.ADMIT)
+
+        def observe(self, tenant, latency_s):
+            pass
+
+        def release(self, tenant):
+            pass
+
+        def record_cancel(self, tenant):
+            pass
+
+        def snapshot(self):
+            return {}
+
+    clock = VirtualClock()
+    eng = make_engine(served, decode_slots=1,
+                      qos=AlwaysThrottle("starved"), clock=clock)
+    rng = np.random.default_rng(3)
+    bad = eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 10),
+                                max_new_tokens=4, tenant="starved",
+                                deadline_s=2.0))
+    g1 = eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 10),
+                               max_new_tokens=4, tenant="good"))
+    g2 = eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 10),
+                               max_new_tokens=4, tenant="good"))
+    eng.step()
+    # bad was throttled, g1 took the slot; FIFO arrival order holds in
+    # the queue: the throttled request is still AHEAD of g2
+    assert [r.req_id for r in eng.waiting] == [bad, g2]
+    for _ in range(30):
+        if not (eng.waiting or eng.active):
+            break
+        eng.step()
+        clock.advance(0.1)
+    # both good requests completed despite the ever-throttled head-of-line
+    assert eng.requests[g1].state == "done"
+    assert eng.requests[g2].state == "done"
+    # and the starved tenant's request died at its deadline, not forever
+    assert eng.requests[bad].state == "cancelled"
+    assert eng.requests[bad].cancel_reason == "deadline"
+
+
+def test_capacity_cancel_when_pool_degrades_mid_run(served):
+    """Expander failure mid-run: the engine cancels what no longer fits
+    (reason='capacity') instead of crashing, and still drains."""
+    cfg, model, params = served
+    system = fresh_system()
+    eng = ServeEngine(model, params, system, EngineConfig(
+        decode_slots=4, max_seq_len=64, page_tokens=8,
+        onboard_pages=4, prefill_bucket=16))
+    rng = np.random.default_rng(4)
+    rids = [eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 20),
+                                  max_new_tokens=8))
+            for _ in range(6)]
+    eng.step()
+    system.inject_failure()          # the only expander dies, no spare
+    eng.run(400)                     # must not raise
+    states = {eng.requests[r].state for r in rids}
+    assert states <= {"done", "cancelled"}
+    cancelled = [r for r in rids
+                 if eng.requests[r].state == "cancelled"]
+    assert cancelled                 # the degraded pool lost real work
+    assert all(eng.requests[r].cancel_reason == "capacity"
+               for r in cancelled)
+    assert eng.stats()["cancelled"] == len(cancelled)
 
 
 def test_tracing_off_by_default(served):
