@@ -609,6 +609,118 @@ def bench_serve_sweep() -> None:
          f"exposed_phased_us={exposed_phased * 1e6:.2f}")
 
 
+# ------------------------------------------ paged-decode kernel sweep
+@scenario("decode_sweep", gate=(
+    Gate("decode_sweep.gate.identity", "tokens_equal", min=1,
+         note="paged decode must emit byte-identical token streams to "
+              "the dense slot-cache reference engine"),
+    Gate("decode_sweep.gate.identity", "paged_rounds", min=1,
+         note="the paged pool-direct rounds actually served the decode "
+              "(not a silent fallback to the dense path)"),
+    Gate("decode_sweep.gate.identity", "kernel_traced", min=1,
+         note="the paged-attention decode dispatcher was staged into "
+              "the compiled step (call-path proof)"),
+    Gate("decode_sweep.gate.traffic", "bytes_reconciled", min=1,
+         note="per-class link.xfer span bytes reconcile exactly with "
+              "fm.op_bytes() — the DecodeView's page traffic rides the "
+              "same metered accounting as every other access"),
+    Gate("decode_sweep.cell.b4.s24", "tok_per_s", min=1000,
+         note="modeled decode throughput (virtual-time) at batch 4"),
+    Gate("decode_sweep.cell.b1.s8", "tok_per_s", min=300,
+         note="modeled decode throughput (virtual-time) at batch 1"),
+))
+def bench_decode_sweep() -> None:
+    """Batch x sequence-length sweep of the paged decode path: every
+    round is ONE batched paged-attention step straight against the
+    paged KV pool (DecodeView), timed on a VIRTUAL clock with a pinned
+    round duration so tokens/s is a modeled, machine-independent
+    figure.  Two gate rows ride along: an identity cell re-serving the
+    largest configuration with ``paged_decode=False`` (byte-identical
+    tokens, paged rounds > 0, kernel dispatcher on the call path) and a
+    traffic cell reconciling the paged rounds' ``link.xfer`` spans
+    against ``fm.op_bytes()`` per accounting class."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.core import system_for
+    from repro.core.metrics import Metrics
+    from repro.kernels import ops as kops
+    from repro.models import build_model
+    from repro.models.flags import Flags
+    from repro.serve import (EngineConfig, ServeEngine, SubmitSpec,
+                             VirtualClock)
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    model = build_model(cfg, Flags(remat=False))
+    params = model.init(jax.random.key(0))
+    round_s = 2e-3
+    max_new = 8
+
+    def serve(batch, prompt_len, *, paged, trace=False):
+        clock = VirtualClock()
+        system = system_for("tpu0", host_id="h0", pool_gib=1,
+                            page_bytes=4096, metrics=Metrics())
+        eng = ServeEngine(model, params, system, EngineConfig(
+            decode_slots=batch, max_seq_len=64, page_tokens=8,
+            onboard_pages=6, prefill_bucket=16, round_time_s=round_s,
+            paged_decode=paged, trace=trace), clock=clock)
+        rng = np.random.default_rng(0)
+        rids = [eng.submit(SubmitSpec(
+            prompt=rng.integers(0, cfg.vocab_size, prompt_len),
+            max_new_tokens=max_new)) for _ in range(batch * 2)]
+        it = 0
+        while (eng.waiting or eng.active) and it < 500:
+            eng.step()
+            clock.advance(round_s)
+            it += 1
+        toks = {r: tuple(eng.requests[r].out_tokens) for r in rids}
+        return eng, toks, clock.now
+
+    for batch in (1, 4):
+        for plen in (8, 24):
+            t0 = time.perf_counter()
+            eng, toks, virtual_s = serve(batch, plen, paged=True)
+            wall_us = (time.perf_counter() - t0) * 1e6
+            n_tok = sum(len(t) for t in toks.values())
+            st = eng.stats()
+            _row(f"decode_sweep.cell.b{batch}.s{plen}",
+                 wall_us / max(n_tok, 1),
+                 f"tok_per_s={n_tok / virtual_s:.1f};"
+                 f"rounds={st['paged_rounds']};"
+                 f"kv_hit={st['kv']['hit_ratio']:.3f};"
+                 f"meter_calls={st['fabric']['meter_calls']}")
+
+    # identity + call-path gate: the largest cell, paged vs dense twin
+    from repro.obs.trace import GLOBAL_TRACER
+    before = kops.paged_attention_decode_traces()
+    # under --trace the engine reuses the harness's enabled global
+    # tracer, so remember where this run's spans start in the ring
+    pre = len(GLOBAL_TRACER.spans()) if GLOBAL_TRACER.enabled else 0
+    eng_p, toks_p, _ = serve(4, 24, paged=True, trace=True)
+    traced = kops.paged_attention_decode_traces() - before
+    # snapshot the paged run's span window BEFORE the dense twin runs
+    # (it records into the same shared ring under --trace)
+    spans = eng_p.trace.spans()
+    if eng_p.trace is GLOBAL_TRACER:
+        spans = spans[pre:]
+    eng_d, toks_d, _ = serve(4, 24, paged=False)
+    _row("decode_sweep.gate.identity", 0.0,
+         f"tokens_equal={int(toks_p == toks_d)};"
+         f"paged_rounds={eng_p.paged_rounds};"
+         f"kernel_traced={traced};"
+         f"dense_paged_rounds={eng_d.paged_rounds}")
+    # traffic gate: the traced paged run's per-class link bytes
+    by_op: Dict[str, int] = {}
+    for sp in spans:
+        if sp.name == "link.xfer":
+            by_op[sp.op] = by_op.get(sp.op, 0) + sp.nbytes
+    fm_bytes = eng_p.kv.buf.host.fm.op_bytes()
+    reconciled = int(bool(by_op) and by_op == fm_bytes)
+    _row("decode_sweep.gate.traffic", 0.0,
+         f"bytes_reconciled={reconciled};"
+         f"link_bytes={sum(by_op.values())};"
+         f"classes={len(by_op)}")
+
+
 # ------------------------------------------- chaos (repro.core.faults)
 @scenario("chaos_sweep", gate=(
     Gate("chaos_sweep.gate.storm", "availability", min=0.99,

@@ -48,3 +48,29 @@ def ssd_scan(xh, dt, A, Bm, Cm, state):
 def paged_attention(q, k_pages, v_pages, page_table, lengths) -> jax.Array:
     return _pa.paged_attention(q, k_pages, v_pages, page_table, lengths,
                                interpret=_interpret())
+
+
+# trace-time call counter for the decode dispatcher: incremented when the
+# paged kernel is staged into a compiled step, so a >0 delta proves the
+# serve engine's decode actually runs through paged attention (asserted
+# by tests and the decode_sweep identity gate) even though the jitted
+# function itself only retraces once per shape
+_pa_decode_traces = 0
+
+
+def paged_attention_decode_traces() -> int:
+    return _pa_decode_traces
+
+
+def paged_attention_decode(q, k_pages, v_pages, page_table,
+                           lengths) -> jax.Array:
+    """Decode-path dispatcher: the double-buffered Pallas kernel on TPU;
+    off-TPU the XLA fallback whose numerics are byte-compatible with the
+    dense decode attention (interpret-mode kernel execution is reserved
+    for the kernel tests — far too slow for a serving loop)."""
+    global _pa_decode_traces
+    _pa_decode_traces += 1
+    if _interpret():
+        return _pa.paged_attention_xla(q, k_pages, v_pages, page_table,
+                                       lengths)
+    return _pa.paged_attention(q, k_pages, v_pages, page_table, lengths)

@@ -8,13 +8,23 @@ rides in SMEM via scalar prefetch — the Pallas equivalent of "allocator
 metadata stays host-side / on-board" (§3.2): the lookup never touches the
 paged data tier.
 
-Grid (B, KV, nP): pages are the sequential axis; the online-softmax state
-(m, l, acc per GQA group) lives in VMEM scratch.  Block = one KV page
-[page_tokens, hd] per head — DMA-friendly contiguous reads from the pool,
-regardless of how the logical sequence is fragmented.
+Grid (B, KV): the page walk happens INSIDE the kernel as a fori_loop over
+the sequence's live pages, with **double-buffered K/V page loads** — while
+page i feeds the softmax/matmul, page i+1's DMA from the HBM pool is
+already in flight (the PR 5 link-layer overlap idea pushed down into the
+kernel; see the double-buffering pattern in the Pallas guide).  The pool
+arrays stay in ``TPUMemorySpace.ANY`` (HBM) and only the two in-flight
+pages ever occupy VMEM, so pool size is bounded by HBM, not VMEM.
 
 Unmapped pages (table entry -1) are clamped to page 0 for the DMA and
-masked out of the softmax — reads are always in-bounds (IOMMU discipline).
+masked out of the softmax — reads are always in-bounds (IOMMU discipline)
+and their probability mass is exactly zero.
+
+``paged_attention_xla`` is the byte-compatible decode fallback for
+off-TPU runs: it reproduces the dense decode path's einsum/softmax
+ordering bit-for-bit (same contraction equation, f32 accumulation, -1e30
+masking, post-einsum scaling) so the serve engine's paged decode emits
+byte-identical tokens to the retired dense-slot path on CPU CI.
 """
 
 from __future__ import annotations
@@ -29,46 +39,67 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _pa_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-               m_ref, l_ref, acc_ref, *, page_tokens: int):
+def _pa_kernel(table_ref, len_ref, q_ref, k_hbm, v_hbm, o_ref,
+               k_buf, v_buf, sem, m_ref, l_ref, acc_ref,
+               *, page_tokens: int):
     b = pl.program_id(0)
-    ip = pl.program_id(2)
-    np_ = pl.num_programs(2)
-
-    @pl.when(ip == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
+    h = pl.program_id(1)
+    T = page_tokens
     length = len_ref[b]
+    n_pages = (length + T - 1) // T
 
-    # pages are allocated densely per request: slot ip is live iff any of
-    # its positions is below the request length (dead pages are skipped,
-    # not just masked — and the clamped table keeps their DMA in-bounds)
-    @pl.when(ip * page_tokens < length)
-    def _body():
-        q = q_ref[...].astype(jnp.float32)          # [G, hd]
-        k = k_ref[...].astype(jnp.float32)          # [T, hd]
-        v = v_ref[...].astype(jnp.float32)          # [T, hd]
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def page_dma(slot, ip):
+        """Async copies pool page table[b, ip] (head h) into VMEM slot."""
+        page = jnp.maximum(table_ref[b, ip], 0)
+        return (pltpu.make_async_copy(k_hbm.at[page, :, h],
+                                      k_buf.at[slot], sem.at[slot, 0]),
+                pltpu.make_async_copy(v_hbm.at[page, :, h],
+                                      v_buf.at[slot], sem.at[slot, 1]))
+
+    @pl.when(n_pages > 0)
+    def _warmup():
+        for cp in page_dma(0, 0):
+            cp.start()
+
+    q = q_ref[...].astype(jnp.float32)              # [G, hd]
+
+    def body(ip, _):
+        slot = jax.lax.rem(ip, 2)
+
+        # hide the next page load behind this page's softmax/matmul
+        @pl.when(ip + 1 < n_pages)
+        def _start_next():
+            for cp in page_dma(jax.lax.rem(ip + 1, 2), ip + 1):
+                cp.start()
+
+        for cp in page_dma(slot, ip):
+            cp.wait()
+        k = k_buf[slot].astype(jnp.float32)         # [T, hd]
+        v = v_buf[slot].astype(jnp.float32)         # [T, hd]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())))         # [G, T]
-        pos = ip * page_tokens + \
-            jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(pos < length, s, NEG_INF)
+        pos = ip * T + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = (pos < length) & (table_ref[b, ip] >= 0)
+        s = jnp.where(valid, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
-        p = jnp.exp(s - m_new)
+        # masked lanes contribute exactly zero even when the whole page
+        # is masked (m stays at NEG_INF, so exp(s - m) would be 1, not 0)
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())))
         m_ref[...] = m_new
+        return 0
 
-    @pl.when(ip == np_ - 1)
-    def _out():
-        l = jnp.maximum(l_ref[...], 1e-20)
-        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+    jax.lax.fori_loop(0, n_pages, body, 0)
+    l = jnp.maximum(l_ref[...], 1e-20)              # length-0 rows -> 0
+    o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("scale_override", "interpret"))
@@ -80,26 +111,27 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     unmapped); lengths [B] -> out [B,H,hd]."""
     B, H, hd = q.shape
     P, T, KV, _ = k_pages.shape
-    MP = page_table.shape[1]
     G = H // KV
-    scale = scale_override or 1.0 / math.sqrt(hd)
+    scale = 1.0 / math.sqrt(hd) if scale_override is None else \
+        scale_override
     qs = (q.reshape(B, KV, G, hd) * scale).astype(q.dtype)
-    safe_table = jnp.maximum(page_table, 0).astype(jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, KV, MP),
+        grid=(B, KV),
         in_specs=[
             pl.BlockSpec((None, None, G, hd),
-                         lambda b, h, ip, tbl, ln: (b, h, 0, 0)),
-            pl.BlockSpec((None, T, None, hd),
-                         lambda b, h, ip, tbl, ln: (tbl[b, ip], 0, h, 0)),
-            pl.BlockSpec((None, T, None, hd),
-                         lambda b, h, ip, tbl, ln: (tbl[b, ip], 0, h, 0)),
+                         lambda b, h, tbl, ln: (b, h, 0, 0)),
+            # the pool stays in HBM; the kernel DMAs pages on demand
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
         ],
         out_specs=pl.BlockSpec((None, None, G, hd),
-                               lambda b, h, ip, tbl, ln: (b, h, 0, 0)),
+                               lambda b, h, tbl, ln: (b, h, 0, 0)),
         scratch_shapes=[
+            pltpu.VMEM((2, T, hd), k_pages.dtype),   # double buffer: K
+            pltpu.VMEM((2, T, hd), v_pages.dtype),   # double buffer: V
+            pltpu.SemaphoreType.DMA((2, 2)),         # [slot, k/v]
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, hd), jnp.float32),
@@ -110,11 +142,44 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
         interpret=interpret,
-    )(safe_table, lengths.astype(jnp.int32), qs, k_pages, v_pages)
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      qs, k_pages, v_pages)
     return out.reshape(B, H, hd)
 
 
-def paged_attention_xla(q, k_pages, v_pages, page_table, lengths):
-    """XLA fallback with identical semantics (used off-TPU)."""
-    from repro.kernels.ref import paged_attention_ref
-    return paged_attention_ref(q, k_pages, v_pages, page_table, lengths)
+def paged_attention_xla(q, k_pages, v_pages, page_table, lengths,
+                        *, scale_override: float | None = None):
+    """Decode-shaped XLA fallback, byte-compatible with the dense path.
+
+    Semantics match :func:`paged_attention`; numerics match the dense
+    decode attention (`models.attention._scores_softmax_out`) **bitwise**:
+    the same einsum contraction (f32 accumulation, scale applied after),
+    -1e30 masking before a plain softmax, and the probabilities cast back
+    to the V dtype for the output contraction.  Masked lanes underflow to
+    exactly 0 after softmax, so clamped-page garbage never leaks — this
+    is what lets the serve engine swap its dense slot cache for the paged
+    pool without perturbing a single emitted token on CPU CI.
+    """
+    B, H, hd = q.shape
+    P, T, KV, _ = k_pages.shape
+    MP = page_table.shape[1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd) if scale_override is None else \
+        scale_override
+    safe = jnp.maximum(page_table, 0)
+    k = k_pages[safe].reshape(B, MP * T, KV, hd)
+    v = v_pages[safe].reshape(B, MP * T, KV, hd)
+    qg = q.reshape(B, 1, KV, G, hd)
+    pos = jnp.arange(MP * T)[None, :]
+    valid = (pos < lengths[:, None]) & \
+        jnp.repeat(page_table >= 0, T, axis=1)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    # all-masked rows (length 0): softmax degenerates to uniform over
+    # NEG_INF lanes; zero them like the kernel does
+    any_valid = jnp.any(valid, axis=1)[:, None, None, None, None]
+    o = jnp.where(any_valid, o, 0.0)
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -156,6 +156,50 @@ def attn_decode(p: Params, cfg, x: jax.Array,
     return y, cache_k, cache_v, cache_pos
 
 
+def attn_decode_paged(p: Params, cfg, x: jax.Array,
+                      k_pages: jax.Array, v_pages: jax.Array,
+                      page_table: jax.Array, lengths: jax.Array,
+                      flags: Flags = DEFAULT_FLAGS):
+    """One-token batched decode straight against the paged KV pool.
+
+    x           [B, 1, D]
+    k/v_pages   [P, T, KV, hd]   the pool (one layer's slice)
+    page_table  [B, MP] int32    pool page indices (-1 = unmapped pad)
+    lengths     [B] int32        tokens already stored per sequence
+
+    The new token's K/V is scattered into each sequence's tail page
+    (``page_table[b, lengths[b] // T]`` must be mapped — the serve layer
+    guarantees a tail page exists before the step) and attention runs
+    over ``lengths + 1`` tokens through the page table.  Numerics match
+    :func:`attn_decode` bitwise (same einsum/softmax ordering via the
+    paged kernel's decode dispatcher), which is what lets the serve
+    engine retire its dense slot cache without perturbing one token.
+
+    Active sequences must not share a tail page (the engine never forks
+    a mid-flight sequence), otherwise the scatters would collide.
+
+    Returns (y, k_pages, v_pages).
+    """
+    from repro.kernels import ops as kops
+    B = x.shape[0]
+    T = k_pages.shape[1]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    positions = lengths[:, None].astype(jnp.int32)  # == dense path's step
+    q, k, v = _qkv(p, cfg, x, positions)
+
+    tail = jnp.take_along_axis(
+        page_table, (lengths[:, None] // T).astype(jnp.int32), axis=1)[:, 0]
+    tail = jnp.maximum(tail, 0)                     # contract: mapped
+    off = lengths % T
+    k_pages = k_pages.at[tail, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[tail, off].set(v[:, 0].astype(v_pages.dtype))
+
+    out = kops.paged_attention_decode(q[:, 0], k_pages, v_pages,
+                                      page_table, lengths + 1)
+    y = dense(p["wo"], out.reshape(B, 1, H * hd))
+    return y, k_pages, v_pages
+
+
 def _write_slot(cache: jax.Array, val: jax.Array, slot: jax.Array) -> jax.Array:
     """cache [B, C, ...], val [B, ...] -> write at ring slot (traced)."""
     return jax.lax.dynamic_update_slice_in_dim(

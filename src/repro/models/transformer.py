@@ -293,3 +293,37 @@ def trunk_decode(layers: Params, cfg: ArchConfig, x: jax.Array,
             pos_slots, jnp.broadcast_to(step, (B, 1)).astype(jnp.int32),
             slot, axis=1)
     return x, new_cache
+
+
+def trunk_decode_paged(layers: Params, cfg: ArchConfig, x: jax.Array,
+                       k_pools: jax.Array, v_pools: jax.Array,
+                       page_table: jax.Array, lengths: jax.Array,
+                       flags: Flags):
+    """Scan over layers decoding one token per sequence straight from the
+    paged KV pool (no dense per-slot cache).
+
+    x          [B, 1, D]
+    k/v_pools  [L, P, T, KV, hd]  per-layer page pools
+    page_table [B, MP] int32      pool page indices (-1 pad)
+    lengths    [B] int32          tokens stored per sequence (pre-step)
+
+    The block body mirrors :func:`block_decode`'s DENSE/MOE branch
+    exactly (norm1 -> attention -> residual -> norm2 -> ffn) with
+    :func:`attn.attn_decode_paged` standing in for the slot-cache
+    attention.  Returns (x, k_pools, v_pools) with the new token's K/V
+    scattered into each sequence's tail page in every layer.
+    """
+
+    def body(carry, inp):
+        x = carry
+        lp, kp, vp = inp
+        xn = rms_norm(lp["norm1"], x, cfg.norm_eps)
+        a, kp, vp = attn.attn_decode_paged(lp["attn"], cfg, xn, kp, vp,
+                                           page_table, lengths, flags)
+        x = x + a
+        y, _ = _ffn(lp, cfg, rms_norm(lp["norm2"], x, cfg.norm_eps), flags)
+        return x + y, (kp, vp)
+
+    x, (k_pools, v_pools) = scan_layers(body, x, (layers, k_pools, v_pools),
+                                        unroll=flags.unroll_layers)
+    return x, k_pools, v_pools

@@ -14,15 +14,16 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+from repro.configs.base import (ArchConfig, DENSE, MOE, ShapeConfig,
+                                SHAPES)
 from repro.models import encdec as encdec_mod
 from repro.models.flags import Flags, DEFAULT_FLAGS
 from repro.models.layers import (chunked_softmax_xent, dtype_of, embed_init,
                                  embed_logits, embed_lookup, rms_norm,
                                  rms_norm_init)
 from repro.models.transformer import (init_cache, stacked_layers_init,
-                                      trunk_decode, trunk_prefill,
-                                      trunk_train)
+                                      trunk_decode, trunk_decode_paged,
+                                      trunk_prefill, trunk_train)
 
 AUX_LOSS_WEIGHT = 0.01
 
@@ -122,6 +123,41 @@ class Model:
             x, cache = trunk_decode(params["trunk"], cfg, x, cache, flags)
         logits = self._readout(params, x)[:, 0]
         return logits, cache
+
+    def supports_paged_decode(self) -> bool:
+        """Whether :meth:`decode_step_paged` covers this architecture.
+
+        The paged pool keeps absolute positions (no ring wrap), so SWA
+        ring caches, recurrent state (RWKV/HYBRID), and encoder-decoder
+        caches stay on the dense slot path."""
+        cfg = self.cfg
+        return (not cfg.encoder_decoder and cfg.sliding_window is None
+                and cfg.block_type in (DENSE, MOE))
+
+    def decode_step_paged(self, params, pool: jax.Array,
+                          page_table: jax.Array, lengths: jax.Array,
+                          token: jax.Array):
+        """One batched decode step straight against the paged KV pool.
+
+        pool       [P, L, 2, T, KV, hd]  page-major (PagedKVStore layout)
+        page_table [B, MP] int32         pool page indices (-1 pad)
+        lengths    [B] int32             tokens stored per sequence
+        token      [B, 1] int32
+
+        Returns (logits [B, V], updated pool) — the new token's K/V is
+        written into each sequence's tail page across all layers.
+        """
+        cfg, flags = self.cfg, self.flags
+        x = embed_lookup(params["embed"], token)
+        k_pools = jnp.moveaxis(pool[:, :, 0], 0, 1)   # [L, P, T, KV, hd]
+        v_pools = jnp.moveaxis(pool[:, :, 1], 0, 1)
+        x, k_pools, v_pools = trunk_decode_paged(
+            params["trunk"], cfg, x, k_pools, v_pools, page_table,
+            lengths, flags)
+        logits = self._readout(params, x)[:, 0]
+        pool = jnp.stack([jnp.moveaxis(k_pools, 0, 1),
+                          jnp.moveaxis(v_pools, 0, 1)], axis=2)
+        return logits, pool
 
     # ------------------------------------------------------------- dry specs
     def input_specs(self, shape: ShapeConfig | str) -> Dict[str, Any]:

@@ -127,6 +127,16 @@ class EngineConfig:
     #: measured wall time, so a sweep driven by a virtual clock is
     #: machine-independent and seed-reproducible
     round_time_s: Optional[float] = None
+    #: decode straight from the paged KV pool: every round runs ONE
+    #: batched paged-attention step over all active slots against a
+    #: DecodeView of the pool (union of the actives' pages, one
+    #: coalesced read burst) instead of a per-request dense slot cache
+    #: filled by host-side gather_seq swap-in.  Token streams are
+    #: byte-identical to the dense path (the decode dispatcher's
+    #: numerics mirror attn_decode bitwise).  Automatically falls back
+    #: to the dense path for architectures the paged kernel does not
+    #: cover (SWA rings, RWKV/HYBRID state, encoder-decoder).
+    paged_decode: bool = True
     #: record spans (serve rounds, TTFT/token events, the KV data path)
     #: into a private tracer attached to the engine's fabric — unless
     #: the fabric already carries an enabled tracer (LMBSystem with
@@ -193,6 +203,14 @@ class ServeEngine:
         self._slot_free = list(range(ecfg.decode_slots))[::-1]
         self._prefill_fn = jax.jit(model.prefill)
         self._decode_fn = jax.jit(model.decode_step)
+        #: paged decode: the batched pool-direct step (retires the dense
+        #: slot cache for decode); dense stays for uncovered archs
+        self._use_paged = (ecfg.paged_decode
+                           and model.supports_paged_decode())
+        self._paged_fn = (jax.jit(model.decode_step_paged)
+                          if self._use_paged else None)
+        self._max_pages = -(-ecfg.max_seq_len // ecfg.page_tokens)
+        self.paged_rounds = 0
 
     # -------------------------------------------------------------- intake
     def submit(self, spec: Union[SubmitSpec, np.ndarray],
@@ -245,7 +263,10 @@ class ServeEngine:
             self.kv.append_tokens(req.seq_id, kv)
         else:
             self.kv.seq(req.seq_id).length = len(req.prompt)
-        req._cache = cache                        # dense handoff
+        # dense handoff only for the slot-cache path; paged decode reads
+        # everything back from the pool, so holding the dense cache per
+        # request would defeat the capacity story
+        req._cache = None if self._use_paged else cache
         nxt = int(np.argmax(np.asarray(logits[0])))
         req.out_tokens.append(nxt)
         if req.first_token_at is None:
@@ -347,9 +368,10 @@ class ServeEngine:
                 # with no spare): cancel instead of crashing the engine
                 self._cancel(req, "capacity")
                 continue
-            # NOTE: active requests decode from their dense slot cache; the
-            # paged store is the park/share tier, so nothing is pinned and
-            # cold pages may spill to the LMB pool freely.
+            # NOTE: nothing is pinned — cold pages may spill to the LMB
+            # pool freely.  Paged decode faults each round's working set
+            # back in one coalesced burst; the dense fallback decodes
+            # from its per-request slot cache.
             slot = self._slot_free.pop()
             req.state = "active"
             self.active[slot] = req
@@ -364,13 +386,20 @@ class ServeEngine:
         self._slot_free.append(slot)
 
     def _schedule_round_prefetch(self) -> None:
-        """Feed the prefetcher this round's exact future: every active
-        sequence's next-decode page list, batched into ONE schedule call
-        so the pages group into per-(chunk, expander) bursts instead of
-        per-sequence dribbles."""
+        """Feed the prefetcher this round's exact future, batched into
+        ONE schedule call so the pages group into per-(chunk, expander)
+        bursts instead of per-sequence dribbles.  Dense path: every
+        active sequence's next-decode (tail) page.  Paged path: every
+        active sequence's FULL page list — the next round's DecodeView
+        reads the whole working set, so all of it is exact future
+        knowledge for the prefetcher."""
         pages: List[int] = []
         for req in self.active.values():
-            if req.seq_id is not None:
+            if req.seq_id is None:
+                continue
+            if self._use_paged:
+                pages.extend(self.kv.seq(req.seq_id).pages)
+            else:
                 pages.extend(self.kv.next_decode_pages(req.seq_id))
         if pages:
             self.kv.schedule_prefetch(pages)
@@ -448,7 +477,12 @@ class ServeEngine:
         """One decode pass over the active slots; returns ``(finished,
         round_dt)`` where ``round_dt`` is the round's compute-window
         duration — ``EngineConfig.round_time_s`` when pinned (virtual
-        sweeps), measured wall time otherwise."""
+        sweeps), measured wall time otherwise.  Dispatches to the paged
+        pool-direct round when :attr:`EngineConfig.paged_decode` covers
+        the model; the per-request dense-slot loop below is the
+        fallback."""
+        if self._use_paged:
+            return self._decode_round_paged()
         round_t0 = time.monotonic()
         finished = 0
         for slot, req in list(self.active.items()):
@@ -488,13 +522,98 @@ class ServeEngine:
                 self._slot_free.append(slot)
                 continue
             if len(req.out_tokens) >= req.max_new_tokens:
-                req.state = "done"
-                req.done_at = self.clock()
-                self.kv.free_seq(req.seq_id)
+                self._finish_active(slot, req)
+                finished += 1
+        if self.ecfg.round_time_s is not None:
+            return finished, (self.ecfg.round_time_s if self.active
+                              or finished else 0.0)
+        return finished, time.monotonic() - round_t0
+
+    def _finish_active(self, slot: int, req: Request) -> None:
+        """Terminal bookkeeping for a request completing in its slot."""
+        req.state = "done"
+        req.done_at = self.clock()
+        self.kv.free_seq(req.seq_id)
+        del self.active[slot]
+        self._slot_free.append(slot)
+        self._qos_finish(req)
+
+    def _decode_round_paged(self) -> tuple:
+        """The pool-direct decode round: ONE batched paged-attention
+        step over every active slot, straight against the paged KV pool.
+
+        The round builds a :class:`~repro.serve.kv_cache.DecodeView`
+        (tail pages guaranteed, the actives' page union faulted onboard
+        with one coalesced burst — the round's touched-page list riding
+        the same meter/prefetch accounting as every other access), runs
+        the compiled ``decode_step_paged`` once for the whole batch, and
+        commits only the tail pages back.  Token streams are
+        byte-identical to the dense per-request loop; what changed is
+        the data path — no per-request dense cache, no host-side
+        gather_seq swap-in.
+        """
+        round_t0 = time.monotonic()
+        finished = 0
+        live: List[tuple] = []
+        for slot, req in list(self.active.items()):
+            if (req.deadline_s is not None
+                    and self.clock() >= req.deadline_s):
+                # mid-flight cancellation: pull the request out of its
+                # decode slot and free its KV sequence immediately
+                self._cancel(req, "deadline")
                 del self.active[slot]
                 self._slot_free.append(slot)
+                continue
+            if self.kv.seq(req.seq_id).length >= self.ecfg.max_seq_len:
+                # context window exhausted: the dense slot cache would
+                # silently ring-wrap here; the paged path finishes the
+                # request instead of outgrowing its page table
+                self._finish_active(slot, req)
                 finished += 1
-                self._qos_finish(req)
+                continue
+            live.append((slot, req))
+        if live:
+            try:
+                view = self.kv.decode_view([r.seq_id for _, r in live],
+                                           self._max_pages)
+                toks = jnp.asarray([[r.out_tokens[-1]] for _, r in live],
+                                   jnp.int32)
+                logits, pool = self._paged_fn(
+                    self.params, view.pool, jnp.asarray(view.tables),
+                    jnp.asarray(view.lengths), toks)
+                logits = np.asarray(logits)
+                self.kv.commit_decode(view, pool)
+            except OutOfMemory:
+                # the pool shrank under us (failover mid-decode): the
+                # round's working set can no longer be materialized —
+                # cancel the batch instead of crashing the engine
+                for slot, req in live:
+                    self._cancel(req, "capacity")
+                    del self.active[slot]
+                    self._slot_free.append(slot)
+                live = []
+            else:
+                self.paged_rounds += 1
+                tr = self.trace
+                if tr.enabled:
+                    tr.event("decode.paged", op="serve",
+                             batch=len(live), pages=len(view.pages),
+                             pool=int(view.pool.shape[0]))
+        for i, (slot, req) in enumerate(live):
+            nxt = int(np.argmax(logits[i]))
+            req.out_tokens.append(nxt)
+            now = self.clock()
+            if req.last_token_at is not None:
+                gap = now - req.last_token_at
+                self.metrics.observe(f"serve.itl.{req.tenant}", gap)
+                tr = self.trace
+                if tr.enabled:
+                    tr.event("token", tenant=req.tenant, op="serve",
+                             req=req.req_id, gap_s=gap)
+            req.last_token_at = now
+            if len(req.out_tokens) >= req.max_new_tokens:
+                self._finish_active(slot, req)
+                finished += 1
         if self.ecfg.round_time_s is not None:
             return finished, (self.ecfg.round_time_s if self.active
                               or finished else 0.0)
@@ -544,6 +663,8 @@ class ServeEngine:
             "done": len(done),
             "waiting": len(self.waiting),
             "active": len(self.active),
+            "decode_path": "paged" if self._use_paged else "dense",
+            "paged_rounds": self.paged_rounds,
             "shed": len(self.shed),
             "cancelled": len(self.cancelled),
             "mean_ttft_s": float(np.mean(ttft)) if ttft else None,

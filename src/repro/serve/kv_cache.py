@@ -41,6 +41,29 @@ class SeqPages:
     length: int = 0
 
 
+@dataclasses.dataclass
+class DecodeView:
+    """One decode round's batched view over the paged pool.
+
+    ``pool`` is the union of the active sequences' pages materialized
+    onboard with ONE coalesced ``read_many`` burst (padded with zero
+    pages to a power of two so the compiled step sees few distinct pool
+    shapes); ``tables`` indexes INTO THE POOL (not logical page ids), so
+    a compiled paged-attention step can consume it directly.  ``pages``
+    is the round's touched-page list — exactly what rides the
+    schedule_prefetch / meter accounting so modeled link traffic
+    reconciles with ``fm.op_bytes()``.
+    """
+
+    sids: List[int]
+    pool: jax.Array          # [P_pad, L, 2, T, KV, hd]
+    tables: np.ndarray       # [B, MP] int32 pool indices (-1 pad)
+    lengths: np.ndarray      # [B] int32 tokens stored (pre-step)
+    pages: List[int]         # union logical pages backing pool[:n]
+    tail_pages: List[int]    # per-sequence logical tail page
+    tail_index: List[int]    # per-sequence pool index of the tail page
+
+
 class PagedKVStore:
     """KV pages over a LinkedBuffer.  Construct with ``system=`` (an
     :class:`~repro.core.client.LMBSystem` session — the client API) or,
@@ -144,9 +167,12 @@ class PagedKVStore:
         seq.length = length
 
     def gather_seq(self, sid: int) -> jax.Array:
-        """Materialize a sequence's KV [L, 2, len_padded, KV, hd] onboard
-        (used for swap-in to a dense decode slot).  ``gather`` rides the
-        batched path: one coalesced transfer per LMB chunk and one
+        """Materialize a sequence's KV [L, 2, seq.length, KV, hd] onboard
+        (used for swap-in to a dense decode slot).  The token axis is
+        trimmed to the sequence's true length — the tail page's unwritten
+        slots are allocator garbage and must never reach attention (the
+        silent padded return was the PR-10 bug class).  ``gather`` rides
+        the batched path: one coalesced transfer per LMB chunk and one
         arbiter charge per expander link for the whole sequence."""
         seq = self._seqs[sid]
         if not seq.pages:
@@ -154,7 +180,8 @@ class PagedKVStore:
         stacked = self.buf.gather(seq.pages)       # [n, L, 2, T, KV, hd]
         n = stacked.shape[0]
         L, _, T, KV, hd = self.page_shape
-        return jnp.moveaxis(stacked, 0, 2).reshape(L, 2, n * T, KV, hd)
+        full = jnp.moveaxis(stacked, 0, 2).reshape(L, 2, n * T, KV, hd)
+        return full[:, :, :seq.length]
 
     def pin_seq(self, sid: int) -> None:
         """Pin a sequence's pages onboard with ONE batched fault burst
@@ -215,8 +242,93 @@ class PagedKVStore:
 
     def page_table(self, sid: int, max_pages: int) -> np.ndarray:
         """int32 [max_pages] logical page ids (-1 pad) — feeds the Pallas
-        paged-attention kernel on TPU."""
+        paged-attention kernel on TPU.  Raises ``ValueError`` when the
+        sequence has outgrown the table: the old behavior silently
+        dropped the tail pages (numpy slice clamping), which would make
+        attention read garbage for every token past the table edge."""
         seq = self._seqs[sid]
+        if len(seq.pages) > max_pages:
+            raise ValueError(
+                f"seq {sid}: {len(seq.pages)} pages exceed the "
+                f"{max_pages}-entry page table (length {seq.length}, "
+                f"page_tokens {self.page_tokens}) — the tail KV would be "
+                f"silently dropped")
         out = np.full((max_pages,), -1, np.int32)
-        out[:len(seq.pages)] = seq.pages[:max_pages]
+        out[:len(seq.pages)] = seq.pages
         return out
+
+    def page_tables(self, sids: List[int],
+                    max_pages: int) -> tuple:
+        """Batched decode view: (tables int32 [B, max_pages] logical page
+        ids with -1 pad, lengths int32 [B]) for one engine round's active
+        sequences — the host-side half of the kernel's L2P lookup.
+        Raises like :meth:`page_table` instead of truncating."""
+        tables = np.full((len(sids), max_pages), -1, np.int32)
+        lengths = np.zeros((len(sids),), np.int32)
+        for i, sid in enumerate(sids):
+            tables[i] = self.page_table(sid, max_pages)
+            lengths[i] = self._seqs[sid].length
+        return tables, lengths
+
+    # ------------------------------------------------------- paged decode
+    def ensure_tail_page(self, sid: int) -> int:
+        """Guarantee the page the sequence's NEXT token lands in exists
+        (a token at a page boundary opens a fresh page); returns its
+        logical id.  Allocation is logical-only — the page materializes
+        on first touch."""
+        seq = self._seqs[sid]
+        idx = seq.length // self.page_tokens
+        if len(seq.pages) == idx:
+            seq.pages.extend(self.buf.append_pages(1))
+        return seq.pages[idx]
+
+    def decode_view(self, sids: List[int], max_pages: int) -> DecodeView:
+        """Build one round's batched decode view: tail pages guaranteed,
+        the union of the active sequences' pages faulted onboard with ONE
+        coalesced ``read_many`` burst (metered exactly like any other
+        batched access — hits for onboard-resident pages, link charges
+        only for LMB misses, waves when the union exceeds onboard
+        capacity), and page tables rewritten into pool-index space for
+        the compiled step.  Active sequences must not share a tail page
+        (the engine never forks a mid-flight sequence)."""
+        for sid in sids:
+            self.ensure_tail_page(sid)
+        tables, lengths = self.page_tables(sids, max_pages)
+        union: List[int] = []
+        index: Dict[int, int] = {}
+        for sid in sids:
+            for p in self._seqs[sid].pages:
+                if p not in index:
+                    index[p] = len(union)
+                    union.append(p)
+        pool = self.buf.read_many(union)       # [n, L, 2, T, KV, hd]
+        n = len(union)
+        # pad with zero pages to a power of two: the compiled decode step
+        # sees O(log) distinct pool shapes instead of one per round
+        cap = max(8, 1 << (n - 1).bit_length())
+        if cap > n:
+            pool = jnp.concatenate(
+                [pool, jnp.zeros((cap - n,) + self.page_shape,
+                                 pool.dtype)])
+        pool_tables = np.full_like(tables, -1)
+        mapped = tables >= 0
+        pool_tables[mapped] = [index[p] for p in tables[mapped].tolist()]
+        tail_pages = [
+            self._seqs[sid].pages[self._seqs[sid].length //
+                                  self.page_tokens]
+            for sid in sids]
+        tail_index = [index[p] for p in tail_pages]
+        return DecodeView(sids=list(sids), pool=pool,
+                          tables=pool_tables,
+                          lengths=lengths, pages=union,
+                          tail_pages=tail_pages, tail_index=tail_index)
+
+    def commit_decode(self, view: DecodeView, pool: jax.Array) -> None:
+        """Write one decode round's results back: only the tail pages
+        changed (the step scatters the new token's K/V there), so ONE
+        ``write_many`` burst covers the whole batch, and each sequence
+        advances by the token it just stored."""
+        rows = pool[np.asarray(view.tail_index, np.int64)]
+        self.buf.write_many(view.tail_pages, rows)
+        for sid in view.sids:
+            self._seqs[sid].length += 1

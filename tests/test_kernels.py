@@ -118,6 +118,94 @@ def test_paged_attention_ignores_unmapped_page_content():
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
 
 
+def test_paged_attention_scale_override_zero():
+    """Regression: ``scale_override=0.0`` is falsy and used to silently
+    fall back to the default 1/sqrt(hd) scale; it must zero the scores
+    (uniform attention over the valid positions), matching the ref."""
+    B, H, KV, hd, P, T, MP = 2, 4, 2, 32, 8, 8, 4
+    ks = jax.random.split(jax.random.key(6), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (P, T, KV, hd))
+    vp = jax.random.normal(ks[2], (P, T, KV, hd))
+    pt = jnp.asarray([[0, 1, -1, -1], [2, 3, 4, -1]], jnp.int32)
+    lengths = jnp.asarray([13, 20])
+    out = paged_attention(q, kp, vp, pt, lengths, scale_override=0.0,
+                          interpret=True)
+    # scale 0 -> uniform weights over the valid prefix
+    expect = np.stack([
+        np.asarray(vp)[np.asarray(pt[b])[:-(-int(lengths[b]) // T)]]
+        .reshape(-1, KV, hd)[:int(lengths[b])].mean(0)
+        for b in range(B)])                       # [B, KV, hd]
+    expect = np.repeat(expect, H // KV, axis=1)   # group-broadcast
+    np.testing.assert_allclose(np.asarray(out), expect,
+                               rtol=2e-5, atol=2e-5)
+    # and it must differ from the silent-default behavior it replaced
+    dflt = paged_attention(q, kp, vp, pt, lengths, interpret=True)
+    assert not np.allclose(np.asarray(out), np.asarray(dflt))
+
+
+@pytest.mark.parametrize("lengths,table", [
+    # a zero-length row batched with a live one
+    ([0, 9], [[-1, -1, -1], [0, 1, 2]]),
+    # length exactly on a page boundary (last page completely full)
+    ([8, 12], [[3, 4, -1], [5, 6, 7]]),
+    # all-unmapped table with zero length (fresh slot)
+    ([0, 4], [[-1, -1, -1], [2, -1, -1]]),
+])
+def test_paged_attention_edge_lengths(lengths, table):
+    """Edge geometry vs ref: zero-length rows, page-boundary lengths,
+    unmapped tables — and the output must be NaN-free in every case."""
+    B, H, KV, hd, P, T = 2, 4, 2, 16, 8, 4
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (P, T, KV, hd))
+    vp = jax.random.normal(ks[2], (P, T, KV, hd))
+    pt = jnp.asarray(table, jnp.int32)
+    ln = jnp.asarray(lengths)
+    out = np.asarray(paged_attention(q, kp, vp, pt, ln, interpret=True))
+    expect = np.asarray(ref.paged_attention_ref(q, kp, vp, pt, ln))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_mixed_batch():
+    """Batched multi-sequence tables with very different lengths — the
+    per-row page walk must not leak state across grid rows."""
+    B, H, KV, hd, P, T, MP = 4, 4, 2, 32, 16, 4, 4
+    ks = jax.random.split(jax.random.key(8), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (P, T, KV, hd))
+    vp = jax.random.normal(ks[2], (P, T, KV, hd))
+    pt = jnp.asarray([[0, 1, 2, 3],
+                      [4, -1, -1, -1],
+                      [-1, -1, -1, -1],
+                      [5, 6, -1, -1]], jnp.int32)
+    ln = jnp.asarray([16, 1, 0, 7])
+    out = np.asarray(paged_attention(q, kp, vp, pt, ln, interpret=True))
+    expect = np.asarray(ref.paged_attention_ref(q, kp, vp, pt, ln))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+    # the length-0 row contributes exactly zero, like the ref
+    assert np.array_equal(out[2], np.zeros_like(out[2]))
+
+
+def test_paged_attention_xla_decode_matches_ref():
+    """The off-TPU decode fallback (the serve engine's CPU path) agrees
+    with the oracle across the same edge geometry the kernel covers."""
+    from repro.kernels.paged_attention import paged_attention_xla
+    B, H, KV, hd, P, T, MP = 3, 4, 2, 16, 8, 4, 3
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (P, T, KV, hd))
+    vp = jax.random.normal(ks[2], (P, T, KV, hd))
+    pt = jnp.asarray([[0, 1, 2], [3, -1, -1], [-1, -1, -1]], jnp.int32)
+    ln = jnp.asarray([12, 3, 0])
+    out = np.asarray(paged_attention_xla(q, kp, vp, pt, ln))
+    expect = np.asarray(ref.paged_attention_ref(q, kp, vp, pt, ln))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
 @pytest.mark.parametrize("B,S,H,P,N,chunk", [
     (2, 64, 2, 8, 8, 16), (1, 128, 4, 16, 16, 64)])
 def test_ssd_chunked_vs_ref(B, S, H, P, N, chunk):

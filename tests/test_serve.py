@@ -375,3 +375,97 @@ def test_tracing_off_by_default(served):
     assert len(eng.trace.spans()) == 0
     # per-tenant histograms still collect (cheap, always on)
     assert eng.stats()["latency"]["serve.ttft.default"]["count"] == 1
+
+
+def test_page_table_overflow_raises(served):
+    """Regression: a sequence outgrowing its page table used to be
+    silently truncated (numpy slice clamping dropped the tail pages) —
+    attention would read garbage for every token past the table edge.
+    Both the scalar and the batched export must raise instead."""
+    cfg, *_ = served
+    kv = PagedKVStore(cfg=cfg, system=fresh_system(), device_id="tpu0",
+                      page_tokens=4, onboard_pages=4)
+    sid = kv.new_seq()
+    L, KV_, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_
+    kv.append_tokens(sid, jnp.ones((L, 2, 10, KV_, hd),
+                                   jnp.dtype(cfg.dtype)))   # 3 pages
+    with pytest.raises(ValueError, match="exceed"):
+        kv.page_table(sid, 2)
+    with pytest.raises(ValueError, match="exceed"):
+        kv.page_tables([sid], 2)
+    # exact fit and slack are both fine
+    assert (kv.page_table(sid, 3) >= 0).all()
+    tables, lengths = kv.page_tables([sid], 5)
+    assert tables.shape == (1, 5)
+    assert (tables[0, :3] >= 0).all() and (tables[0, 3:] == -1).all()
+    assert lengths[0] == 10
+
+
+def test_gather_seq_trims_to_length(served):
+    """Regression: gather_seq used to return n_pages*page_tokens tokens
+    with an uninitialized tail and no valid-length signal; it must trim
+    to the sequence's true length."""
+    cfg, *_ = served
+    kv = PagedKVStore(cfg=cfg, system=fresh_system(), device_id="tpu0",
+                      page_tokens=4, onboard_pages=4)
+    sid = kv.new_seq()
+    L, KV_, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim_
+    data = jnp.arange(L * 2 * 10 * KV_ * hd, dtype=jnp.dtype(cfg.dtype)) \
+        .reshape(L, 2, 10, KV_, hd)
+    kv.append_tokens(sid, data)
+    got = kv.gather_seq(sid)
+    assert got.shape == (L, 2, 10, KV_, hd)      # not padded to 12
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(data))
+
+
+def test_paged_decode_serves_identical_tokens(served):
+    """The tentpole contract: with paged_decode on (the default), every
+    decode round runs ONE batched paged-attention step against the
+    paged pool, and the emitted token streams are byte-identical to the
+    dense slot-cache path."""
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, 100, n).astype(np.int32)
+               for n in (5, 13, 20, 9, 17)]
+
+    def serve(paged):
+        eng = make_engine(served, paged_decode=paged, trace=paged)
+        rids = [eng.submit(SubmitSpec(prompt=p, max_new_tokens=6))
+                for p in prompts]
+        eng.run(300)
+        toks = [eng.requests[r].out_tokens for r in rids]
+        assert all(eng.requests[r].state == "done" for r in rids)
+        return toks, eng
+
+    dense_toks, dense_eng = serve(False)
+    before = kops.paged_attention_decode_traces()
+    paged_toks, paged_eng = serve(True)
+    assert paged_toks == dense_toks              # byte-identical streams
+    # the paged kernel path actually served the rounds
+    assert dense_eng.paged_rounds == 0
+    assert paged_eng.paged_rounds > 0
+    assert kops.paged_attention_decode_traces() > before
+    assert paged_eng.stats()["decode_path"] == "paged"
+    assert dense_eng.stats()["decode_path"] == "dense"
+    # ...and left its span in the trace
+    names = [s.name for s in paged_eng.trace.spans()]
+    assert "decode.paged" in names
+    # the dense handoff cache is retired on the paged path
+    assert all(r._cache is None for r in paged_eng.requests.values())
+
+
+def test_paged_decode_spills_past_onboard(served):
+    """Paged decode with a working set far beyond the onboard tier: the
+    DecodeView's coalesced read bursts wave through onboard capacity and
+    requests still complete (the capacity thesis on the new data path)."""
+    eng = make_engine(served, decode_slots=4, onboard_pages=4)
+    assert eng._use_paged
+    rng = np.random.default_rng(8)
+    rids = [eng.submit(SubmitSpec(prompt=rng.integers(0, 100, 20),
+                                  max_new_tokens=6))
+            for _ in range(6)]
+    eng.run(400)
+    assert all(eng.requests[r].state == "done" for r in rids)
+    c = eng.kv.buf.metrics.tier(eng.kv.buf.name, "onboard")
+    assert c.misses > 0              # spill traffic actually happened
